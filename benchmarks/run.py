@@ -1,0 +1,244 @@
+"""Benchmark harness — one benchmark per paper claim/figure + system perf.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_tree_scaling       paper Fig.1 claim: replicate-and-front scales
+  bench_lb_policies        stateless vs stateful LBs (paper §II)
+  bench_concurrency        RQ-A (paper §III.A) — per-policy instance counts
+  bench_emulation          RQ-B (paper §III.B) — fidelity + emulation speedup
+  bench_serving_engine     real-model worker throughput (Fig.2 step 1 rig)
+  bench_kernels            Pallas kernel microbench (interpret) vs oracle
+  bench_sim_throughput     simulator events/s (testbed capacity)
+  roofline_table           dry-run artifacts summary (if sweep has run)
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.2f},{derived}")
+
+
+def bench_tree_scaling():
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import build_tree, replicate
+    from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                      poisson_load, summarize)
+    from repro.core.types import FunctionConfig
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                             cold_start_s=0.2))
+    base = build_tree(8, fanout=4)
+    for times in (1, 2, 4, 8):
+        tree = base if times == 1 else replicate(base, times=times)
+        sim = Simulator(tree, store, SyntheticServiceModel(seed=2), seed=7)
+        rps = 300 * times
+        poisson_load(sim, fn="fn", rps=rps, duration_s=10, seed=3)
+        t0 = time.perf_counter()
+        s = summarize(sim.run())
+        wall = time.perf_counter() - t0
+        _row(f"tree_scaling_x{times}", 1e6 * s["p99"],
+             f"workers={8*times};rps={rps};p50_ms={s['p50']*1e3:.1f};"
+             f"fail={s['fail_rate']:.3f};sim_wall_s={wall:.1f}")
+
+
+def bench_lb_policies():
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import build_tree
+    from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                      poisson_load, summarize)
+    from repro.core.types import FunctionConfig
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                             cold_start_s=0.2))
+    for pol in ("random", "round_robin", "least_loaded", "pow2",
+                "warm_affinity"):
+        sim = Simulator(build_tree(16, fanout=4, leaf_policy=pol), store,
+                        SyntheticServiceModel(seed=2), seed=7)
+        poisson_load(sim, fn="fn", rps=500, duration_s=10, seed=3)
+        s = summarize(sim.run())
+        _row(f"lb_policy_{pol}", 1e6 * s["p99"],
+             f"p50_ms={s['p50']*1e3:.2f};cold={s['cold_rate']:.3f}")
+
+
+def bench_concurrency():
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import build_tree
+    from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                      poisson_load, summarize)
+    from repro.core.types import FunctionConfig
+    for name, c in (("lambda_c1", 1), ("knative_c8", 8), ("azure_unlim", 0)):
+        store = ConfigStore()
+        store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=c,
+                                 cold_start_s=0.25, idle_timeout_s=8.0,
+                                 max_instances_per_worker=16))
+        sim = Simulator(build_tree(16, fanout=4), store,
+                        SyntheticServiceModel(seed=2), seed=7)
+        poisson_load(sim, fn="fn", rps=400, duration_s=20, seed=11)
+        s = summarize(sim.run())
+        inst = sum(w.instances_started for w in sim.workers.values())
+        _row(f"concurrency_{name}", 1e6 * s["p99"],
+             f"instances={inst};p50_ms={s['p50']*1e3:.1f};"
+             f"cold={s['cold_rate']:.3f}")
+
+
+def bench_emulation():
+    from repro.core.config_store import ConfigStore
+    from repro.core.emulation import (EmulatedServiceModel, RidgeWorkerModel,
+                                      fidelity_report, telemetry_matrix)
+    from repro.core.router import build_tree
+    from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                      poisson_load)
+    from repro.core.types import FunctionConfig
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                             cold_start_s=0.2))
+    real = Simulator(build_tree(8, fanout=4), store,
+                     SyntheticServiceModel(seed=2), seed=5)
+    poisson_load(real, fn="fn", rps=150, duration_s=15, seed=4)
+    t0 = time.perf_counter()
+    real_res = real.run()
+    t_real = time.perf_counter() - t0
+    X, y, ok = telemetry_matrix([r for r in real.telemetry if r.latency > 0])
+    t0 = time.perf_counter()
+    model = RidgeWorkerModel.fit(X, y, ok)
+    t_fit = time.perf_counter() - t0
+    emu = Simulator(build_tree(8, fanout=4), store,
+                    EmulatedServiceModel(model, seed=0), seed=5)
+    poisson_load(emu, fn="fn", rps=150, duration_s=15, seed=4)
+    t0 = time.perf_counter()
+    emu_res = emu.run()
+    t_emu = time.perf_counter() - t0
+    rep = fidelity_report(np.array([r.latency for r in real_res if r.ok]),
+                          np.array([r.latency for r in emu_res if r.ok]))
+    _row("emulation_fidelity", 1e6 * t_fit,
+         f"p50_err={rep['p50_rel_err']:.3f};p95_err={rep['p95_rel_err']:.3f};"
+         f"p99_err={rep['p99_rel_err']:.3f};ks={rep['ks']:.3f}")
+    _row("emulation_speed", 1e6 * t_emu / max(len(emu_res), 1),
+         f"vs_groundtruth_us={1e6*t_real/max(len(real_res),1):.1f}")
+
+
+def bench_serving_engine():
+    from repro.core.config_store import ConfigStore, ImageRegistry
+    from repro.core.router import build_tree
+    from repro.core.types import FunctionConfig, Request
+    from repro.serving.engine import Engine
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                             gen_tokens=4))
+    eng = Engine(build_tree(1, fanout=2), store, ImageRegistry(), max_len=64)
+    # warm (exclude compile)
+    eng.submit(Request(fn="fn", arrival_t=0.0, size=8))
+    eng.run()
+    t0 = time.perf_counter()
+    n = 8
+    for i in range(n):
+        eng.submit(Request(fn="fn", arrival_t=0.0, size=8))
+    res = eng.run()
+    wall = time.perf_counter() - t0
+    toks = sum(4 for _ in res)
+    _row("serving_engine_warm", 1e6 * wall / n,
+         f"tok_per_s={toks/wall:.1f};batched_slots=4")
+    w = list(eng.workers.values())[0]
+    inst = w.instances["fn"][0]
+    _row("serving_cold_start", 1e6 * inst.cold_start_s, "compile+init")
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref as R
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.mamba_scan import mamba_scan
+    rng = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 1, 512, 4, 2, 64
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    for name, fn in (
+            ("flash_attn_interpret",
+             lambda: flash_attention(q, k, v, causal=True, block_q=128,
+                                     block_k=128)),
+            ("flash_attn_ref_xla",
+             lambda: R.flash_attention_ref(q, k, v, causal=True))):
+        fn()
+        t0 = time.perf_counter()
+        fn()
+        _row(name, 1e6 * (time.perf_counter() - t0),
+             f"S={S};flops={4*H*hd*S*S*B//2}")
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (1, 256, 128))) * 0.1
+    x = jax.random.normal(ks[1], (1, 256, 128))
+    Bc = jax.random.normal(ks[2], (1, 256, 16))
+    A = -jnp.exp(jax.random.normal(ks[0], (128, 16)) * 0.2)
+    D = jnp.ones(128)
+    t0 = time.perf_counter()
+    mamba_scan(dt, x, Bc, Bc, A, D, chunk=64, block_d=64)
+    _row("mamba_scan_interpret", 1e6 * (time.perf_counter() - t0),
+         "S=256;DI=128;N=16")
+
+
+def bench_sim_throughput():
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import build_tree
+    from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                      poisson_load)
+    from repro.core.types import FunctionConfig
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                             cold_start_s=0.1))
+    sim = Simulator(build_tree(256, fanout=16), store,
+                    SyntheticServiceModel(seed=2), seed=7)
+    n = poisson_load(sim, fn="fn", rps=5000, duration_s=10, seed=3)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    _row("sim_throughput", 1e6 * wall / n,
+         f"requests={n};workers=256;req_per_s={n/wall:.0f}")
+
+
+def roofline_table():
+    import json
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        _row("roofline_table", 0.0, "no dryrun artifacts; run repro.launch.sweep")
+        return
+    for f in sorted(os.listdir(art)):
+        if not f.endswith(".json"):
+            continue
+        with open(os.path.join(art, f)) as fh:
+            d = json.load(fh)
+        if d.get("status") != "ok":
+            continue
+        r = d["report"]
+        _row(f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}",
+             1e6 * max(r["t_compute"], r["t_memory"], r["t_collective"]),
+             f"bottleneck={r['bottleneck']};useful={r['useful_flops_ratio']:.3f};"
+             f"frac={r['roofline_fraction']:.4f};peak_gib={r['mem']['peak_gib']:.1f};"
+             f"fits={d.get('fits')}")
+
+
+BENCHES = [bench_tree_scaling, bench_lb_policies, bench_concurrency,
+           bench_emulation, bench_serving_engine, bench_kernels,
+           bench_sim_throughput, roofline_table]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for b in BENCHES:
+        if only and only not in b.__name__:
+            continue
+        try:
+            b()
+        except Exception as e:  # keep the harness robust
+            _row(b.__name__ + "_ERROR", 0.0, repr(e)[:120])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end serving driver (deliverable b): serve a small LM with batched
+requests through the full platform — router tree, worker lifecycle, continuous
+batching, measured cold starts — and report throughput/latency.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py [n_requests]
+"""
+import sys
+sys.path.insert(0, "src")
+import time
+
+from repro.core.config_store import ConfigStore, ImageRegistry
+from repro.core.router import build_tree
+from repro.core.simulator import summarize
+from repro.core.types import FunctionConfig, Request
+from repro.serving.engine import Engine
+
+
+def main(n_requests: int = 24):
+    store = ConfigStore()
+    store.put(FunctionConfig(name="llm", arch="small_lm", concurrency=4,
+                             gen_tokens=8, idle_timeout_s=120.0))
+    tree = build_tree(2, fanout=2, leaf_policy="least_loaded")
+    engine = Engine(tree, store, ImageRegistry(), max_len=64)
+
+    t0 = time.monotonic()
+    for i in range(n_requests):
+        engine.submit(Request(fn="llm", arrival_t=0.0, size=8 + 8 * (i % 3)))
+    results = engine.run()
+    wall = time.monotonic() - t0
+
+    s = summarize(results)
+    tel = engine.telemetry()
+    tokens = sum(t.gen_tokens for t in tel)
+    print(f"served {s['ok']}/{s['n']} requests in {wall:.2f}s "
+          f"({tokens / wall:.1f} tok/s, {s['n'] / wall:.2f} req/s)")
+    print(f"latency p50={s['p50']*1e3:.0f}ms p95={s['p95']*1e3:.0f}ms "
+          f"p99={s['p99']*1e3:.0f}ms  cold_rate={s['cold_rate']:.2f}")
+    colds = [w.instances for w in engine.workers.values()]
+    n_inst = sum(len(il) for w in engine.workers.values()
+                 for il in w.instances.values())
+    print(f"instances alive: {n_inst}; per-worker telemetry rows: "
+          f"{[len(w.telemetry) for w in engine.workers.values()]}")
+    # continuous batching evidence: batch sizes > 1 were used
+    bs = [t.batch_size for t in tel]
+    print(f"slot occupancy seen: min={min(bs)} max={max(bs)} "
+          f"(max>1 proves continuous batching)")
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 24)

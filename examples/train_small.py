@@ -1,0 +1,78 @@
+"""Train a ~110M-param LM for a few hundred steps with the full substrate:
+sharded params (local mesh), grad accumulation, checkpoint/restart, data
+pipeline. Demonstrates the training side of the platform (function images
+are *trained* somewhere before they are served).
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps N] [--resume]
+(defaults small enough for CPU; pass --steps 300 for the full run)
+"""
+import sys
+sys.path.insert(0, "src")
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, Prefetcher, TokenStream
+from repro.distributed.checkpoint import CheckpointManager
+from repro.models import build_model
+from repro.train.optimizer import AdamW
+from repro.train.schedule import warmup_cosine
+from repro.train.trainer import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the real 110M config (slow on CPU)")
+    ap.add_argument("--ckpt", default="artifacts/train_small")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    cfg = get_config("train_100m")
+    if not args.full_size:
+        cfg = reduced(cfg, layers=4, d_model=128, vocab=2048)
+    model = build_model(cfg, attn_block=64)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params as built)")
+
+    opt = AdamW(lr=warmup_cosine(3e-3, 20, args.steps), weight_decay=0.01)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt, accum=2,
+                                      grad_acc_dtype="float32"))
+
+    mgr = CheckpointManager(args.ckpt, keep=2)
+    start, restored = mgr.restore_latest({"p": params, "o": opt_state})
+    if restored is not None:
+        params, opt_state = restored["p"], restored["o"]
+        print(f"resumed from checkpoint step {start}")
+    start = start or 0
+
+    stream = TokenStream(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    global_batch=args.batch, seed=0))
+    pf = Prefetcher(stream, start_step=start)
+    t0 = time.time()
+    try:
+        for i in range(start, start + args.steps):
+            params, opt_state, m = step_fn(params, opt_state, pf.next())
+            if i % 10 == 0 or i == start + args.steps - 1:
+                toks = args.batch * args.seq * (i - start + 1)
+                print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                      f"gnorm={float(m['grad_norm']):.3f} "
+                      f"({toks/(time.time()-t0):.0f} tok/s)")
+            if i and i % 50 == 0:
+                mgr.save(i, {"p": params, "o": opt_state})
+    finally:
+        pf.stop()
+    mgr.save(start + args.steps, {"p": params, "o": opt_state})
+    mgr.wait()
+    print(f"done; checkpoints at {args.ckpt}: steps {mgr.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768(expert)
+vocab=131072, MoE 8 experts top-2. [hf:xai-org/grok-1]
+
+8 experts do not divide the 16-way model axis => experts are TP-sharded on the
+expert_ff dim (32768/16 = 2048/shard) instead of expert-parallel (DESIGN.md §5).
+bf16 optimizer state so the train cell fits 16 GB/chip at 314B params.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="grok1_314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=0,
+    vocab_size=131072,
+    moe=MoEConfig(num_experts=8, top_k=2, expert_ff=32768, sharding="tp"),
+    tie_embeddings=True,
+    opt_state_dtype="bfloat16",
+    fsdp_pod=True,
+    optimizer="adafactor",   # factored 2nd moment: m+v bf16 would be 4.9 GiB/chip
+    grad_accum=16,
+    logits_chunk=1024,
+))

@@ -1,0 +1,197 @@
+"""The load-balancer tree (paper Fig. 1 / §II).
+
+Every node exposes the same ``route(request) -> leaf worker id`` interface;
+inner nodes pick a child, leaves pick a worker. "To scale the system up by a
+factor of two, simply replicate the existing servers and add a load balancer
+in front to randomly assign requests to one branch" — that recipe is
+:func:`replicate`.
+
+Policies are pluggable and split exactly along the paper's stateless/stateful
+axis: stateless ones look only at the request; stateful ones read worker-state
+snapshots (queue depth, in-flight, warm instances) through a ``StateView`` —
+which the testbed can delay/stale-ify to study the cost of state freshness.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.types import Request
+
+
+@dataclass
+class WorkerState:
+    """Snapshot a stateful LB reads (possibly stale)."""
+    worker: str
+    queue_len: int = 0
+    inflight: int = 0
+    capacity: int = 1                  # slots across warm instances
+    warm_fns: frozenset = frozenset()
+    healthy: bool = True
+
+    @property
+    def load(self) -> float:
+        return (self.queue_len + self.inflight) / max(self.capacity, 1)
+
+
+class StateView:
+    """Worker-state source with optional staleness (simulated gRPC lag)."""
+
+    def __init__(self, staleness_s: float = 0.0):
+        self.staleness_s = staleness_s
+        self._now: Dict[str, WorkerState] = {}
+        self._stale: Dict[str, WorkerState] = {}
+        self._stale_t: float = -1e30
+
+    def update(self, state: WorkerState, t: float = 0.0):
+        self._now[state.worker] = state
+        if t - self._stale_t >= self.staleness_s:
+            self._stale = dict(self._now)
+            self._stale_t = t
+
+    def get(self, worker: str, t: float = 0.0) -> WorkerState:
+        src = self._now if self.staleness_s == 0 else self._stale
+        return src.get(worker, WorkerState(worker))
+
+
+# ---------------------------------------------------------------------------
+# Policies: (request, worker_ids, view, rng, t) -> worker_id
+# ---------------------------------------------------------------------------
+
+def random_policy(req, workers, view, rng, t):
+    return workers[rng.randrange(len(workers))]
+
+
+def round_robin_policy():
+    state = {"i": 0}
+
+    def policy(req, workers, view, rng, t):
+        state["i"] = (state["i"] + 1) % len(workers)
+        return workers[state["i"]]
+    return policy
+
+
+def hash_policy(req, workers, view, rng, t):
+    return workers[hash((req.fn, req.rid // 64)) % len(workers)]
+
+
+def least_loaded_policy(req, workers, view, rng, t):
+    return min(workers, key=lambda w: (view.get(w, t).load, rng.random()))
+
+
+def pow2_policy(req, workers, view, rng, t):
+    """Power of two choices — near-optimal with O(1) state reads."""
+    a, b = rng.sample(range(len(workers)), 2) if len(workers) > 1 else (0, 0)
+    wa, wb = workers[a], workers[b]
+    return wa if view.get(wa, t).load <= view.get(wb, t).load else wb
+
+
+def warm_affinity_policy(req, workers, view, rng, t):
+    """Prefer least-loaded worker holding a warm instance of req.fn."""
+    warm = [w for w in workers if req.fn in view.get(w, t).warm_fns]
+    pool = warm or workers
+    return min(pool, key=lambda w: (view.get(w, t).load, rng.random()))
+
+
+POLICIES: Dict[str, Callable] = {
+    "random": lambda: random_policy,
+    "round_robin": round_robin_policy,
+    "hash": lambda: hash_policy,
+    "least_loaded": lambda: least_loaded_policy,
+    "pow2": lambda: pow2_policy,
+    "warm_affinity": lambda: warm_affinity_policy,
+}
+
+STATELESS = {"random", "round_robin", "hash"}
+
+
+# ---------------------------------------------------------------------------
+# Tree
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LBNode:
+    name: str
+    policy_name: str
+    children: List["LBNode"] = field(default_factory=list)
+    workers: List[str] = field(default_factory=list)     # leaf only
+    _policy: Callable = None
+
+    def __post_init__(self):
+        self._policy = POLICIES[self.policy_name]()
+
+    @property
+    def is_leaf(self) -> bool:
+        return bool(self.workers)
+
+    def route(self, req: Request, view: StateView, rng: random.Random,
+              t: float = 0.0, _hops: int = 0) -> tuple:
+        """Returns (worker_id, hops)."""
+        if self.is_leaf:
+            return self._policy(req, self.workers, view, rng, t), _hops + 1
+        child = self._policy(req, [c.name for c in self.children],
+                             view, rng, t)
+        node = next(c for c in self.children if c.name == child)
+        return node.route(req, view, rng, t, _hops + 1)
+
+    def all_workers(self) -> List[str]:
+        if self.is_leaf:
+            return list(self.workers)
+        out = []
+        for c in self.children:
+            out.extend(c.all_workers())
+        return out
+
+    # ---- elasticity (paper's scaling recipe + live add/remove) ----------
+    def add_branch(self, node: "LBNode"):
+        assert not self.is_leaf, "cannot add a branch to a leaf"
+        self.children.append(node)
+
+    def remove_branch(self, name: str):
+        self.children = [c for c in self.children if c.name != name]
+
+
+def build_leaf(name: str, workers: Sequence[str],
+               policy: str = "least_loaded") -> LBNode:
+    return LBNode(name, policy, workers=list(workers))
+
+
+def build_tree(n_workers: int, fanout: int = 8, *,
+               leaf_policy: str = "least_loaded",
+               inner_policy: str = "random",
+               prefix: str = "lb") -> LBNode:
+    """Balanced tree: leaves hold ≤ fanout workers; inner nodes ≤ fanout kids."""
+    leaves = []
+    for i in range(0, n_workers, fanout):
+        ws = [f"w{j}" for j in range(i, min(i + fanout, n_workers))]
+        leaves.append(build_leaf(f"{prefix}-leaf{i // fanout}", ws, leaf_policy))
+    level = 0
+    nodes = leaves
+    while len(nodes) > 1:
+        level += 1
+        nxt = []
+        for i in range(0, len(nodes), fanout):
+            group = nodes[i:i + fanout]
+            nxt.append(LBNode(f"{prefix}-l{level}n{i // fanout}", inner_policy,
+                              children=group))
+        nodes = nxt
+    root = nodes[0]
+    if root.is_leaf:
+        # always have an inner root LB so branches can be added/removed live
+        root = LBNode(f"{prefix}-root", inner_policy, children=[root])
+    return root
+
+
+def replicate(tree: LBNode, times: int = 2, *,
+              inner_policy: str = "random") -> LBNode:
+    """The paper's scale-by-k recipe: clone the subtree k-1 times (with fresh
+    worker ids) and put a stateless LB in front."""
+    def clone(node: LBNode, tag: str) -> LBNode:
+        if node.is_leaf:
+            return LBNode(f"{node.name}-{tag}", node.policy_name,
+                          workers=[f"{w}-{tag}" for w in node.workers])
+        return LBNode(f"{node.name}-{tag}", node.policy_name,
+                      children=[clone(c, tag) for c in node.children])
+    branches = [tree] + [clone(tree, f"r{i}") for i in range(1, times)]
+    return LBNode("lb-root", inner_policy, children=branches)

@@ -1,0 +1,388 @@
+"""Deterministic discrete-event simulator for the HyperFaaS testbed.
+
+This is what lets the platform be *studied under massive load* (paper §I):
+thousands of (emulated) workers, millions of requests, virtual time. The same
+router tree / config store / concurrency policies run here as in the real
+in-process engine (``repro.serving.engine``); only the worker execution is
+replaced by a service-time model — either a synthetic profile or the learned
+RQ-B worker model (paper Fig. 2 step 3).
+
+Fault tolerance features exercised here: worker fail/recover injection,
+per-worker straggler slowdowns, hedged requests (tail mitigation), queue
+timeouts, and live add/remove of tree branches (elastic scaling).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.config_store import ConfigStore
+from repro.core.router import LBNode, StateView, WorkerState
+from repro.core.types import FunctionConfig, Request, RequestResult, TelemetryRecord
+
+
+# ---------------------------------------------------------------------------
+# Service-time models
+# ---------------------------------------------------------------------------
+
+class SyntheticServiceModel:
+    """Deterministic-plus-noise cost: t = t0 + a*(prompt+gen)*fn_cost, scaled by
+    slot contention; lognormal jitter. The 'ground truth' worker for RQ-B."""
+
+    def __init__(self, *, t0=0.004, per_token=0.0008, contention=0.30,
+                 jitter=0.08, fail_rate=0.002, seed=0):
+        self.t0, self.per_token, self.contention = t0, per_token, contention
+        self.jitter, self.fail_rate = jitter, fail_rate
+        self.rng = random.Random(seed)
+
+    def sample(self, cfg: FunctionConfig, *, batch_size: int, queue_len: int,
+               prompt: int, cold: bool, fn_cost: float):
+        base = self.t0 + self.per_token * (prompt + cfg.gen_tokens) * fn_cost
+        base *= 1.0 + self.contention * max(batch_size - 1, 0)
+        base *= self.rng.lognormvariate(0.0, self.jitter)
+        ok = self.rng.random() >= self.fail_rate
+        return base, ok
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Instance:
+    iid: str
+    fn: str
+    slots: int                 # 0 => unlimited (soft)
+    busy: int = 0
+    last_used: float = 0.0
+    ready_t: float = 0.0       # cold start completes
+
+    def has_free_slot(self) -> bool:
+        return self.busy < self.slots if self.slots > 0 else True
+
+
+@dataclass
+class _Worker:
+    name: str
+    capacity_slots: int = 16           # hardware concurrency of the node
+    slowdown: float = 1.0              # straggler factor
+    healthy: bool = True
+    instances: Dict[str, List[_Instance]] = field(default_factory=dict)
+    queue: List[Request] = field(default_factory=list)
+    busy_time: float = 0.0
+    cold_starts: int = 0
+    instances_started: int = 0
+    poke_times: set = field(default_factory=set)   # dedupe scheduled pokes
+
+    def warm_fns(self) -> frozenset:
+        return frozenset(fn for fn, il in self.instances.items() if il)
+
+    def inflight(self) -> int:
+        return sum(i.busy for il in self.instances.values() for i in il)
+
+    def slots_total(self) -> int:
+        return sum((i.slots if i.slots > 0 else max(i.busy, 1))
+                   for il in self.instances.values() for i in il) or 1
+
+
+class Simulator:
+    def __init__(self, tree: LBNode, store: ConfigStore, service_model, *,
+                 seed: int = 0, state_staleness_s: float = 0.0,
+                 hedge_after_s: Optional[float] = None,
+                 cold_start_default_s: float = 0.25,
+                 network_hop_s: float = 0.0005,
+                 worker_capacity_slots: int = 16):
+        self.tree = tree
+        self.store = store
+        self.model = service_model
+        self.rng = random.Random(seed)
+        self.view = StateView(state_staleness_s)
+        self.hedge_after_s = hedge_after_s
+        self.cold_default = cold_start_default_s
+        self.hop_s = network_hop_s
+        self.workers: Dict[str, _Worker] = {
+            w: _Worker(w, capacity_slots=worker_capacity_slots)
+            for w in tree.all_workers()}
+        self._worker_list = list(self.workers)   # cache (rebuilt on add/remove)
+        self._events: list = []
+        self._seq = itertools.count()
+        self._iid = itertools.count()
+        self.now = 0.0
+        self.results: List[RequestResult] = []
+        self.telemetry: List[TelemetryRecord] = []
+        self._finished: set = set()
+        self._fn_cost: Dict[str, float] = {}
+
+    # ----------------------------------------------------------- event API
+    def _push(self, t: float, kind: str, payload):
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def submit(self, req: Request):
+        self._push(req.arrival_t, "arrival", req)
+
+    def inject_failure(self, worker: str, at: float, recover_after: float):
+        self._push(at, "fail", worker)
+        self._push(at + recover_after, "recover", worker)
+
+    def set_straggler(self, worker: str, factor: float):
+        self.workers[worker].slowdown = factor
+
+    def add_branch(self, node: LBNode):
+        self.tree.add_branch(node)
+        for w in node.all_workers():
+            self.workers[w] = _Worker(w)
+        self._worker_list = list(self.workers)
+
+    def remove_branch(self, name: str):
+        self.tree.remove_branch(name)
+        self._worker_list = self.tree.all_workers()
+
+    def fn_cost(self, fn: str) -> float:
+        if fn not in self._fn_cost:
+            from repro.configs import get_config
+            try:
+                arch = self.store.get(fn).arch
+                self._fn_cost[fn] = get_config(arch).param_count() / 1e7
+            except Exception:
+                self._fn_cost[fn] = 1.0
+        return self._fn_cost[fn]
+
+    # ---------------------------------------------------------------- run
+    def run(self, until: Optional[float] = None):
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            if until is not None and t > until:
+                break
+            self.now = t
+            getattr(self, f"_on_{kind}")(payload)
+        return self.results
+
+    # ------------------------------------------------------------- events
+    def _refresh_view(self, w: _Worker):
+        self.view.update(WorkerState(
+            worker=w.name, queue_len=len(w.queue), inflight=w.inflight(),
+            capacity=w.slots_total(), warm_fns=w.warm_fns(),
+            healthy=w.healthy), self.now)
+
+    def _on_arrival(self, req: Request):
+        healthy = [w for w in self._worker_list
+                   if self.workers[w].healthy]
+        if not healthy:
+            self._record_fail(req, "no healthy workers")
+            return
+        wid, hops = self.tree.route(req, self.view, self.rng, self.now)
+        if not self.workers[wid].healthy:          # stale routing: re-roll
+            wid = self.rng.choice(healthy)
+        w = self.workers[wid]
+        cfg = self.store.get(req.fn)
+        self.telemetry.append(TelemetryRecord(
+            fn=req.fn, t=self.now, queue_len=len(w.queue),
+            inflight=w.inflight(), batch_size=0, cold=False,
+            prompt_tokens=req.size, gen_tokens=cfg.gen_tokens,
+            fn_cost=self.fn_cost(req.fn), latency=0.0, ok=True))
+        req._telemetry_idx = len(self.telemetry) - 1
+        req._worker = wid
+        self._push(self.now + self.hop_s * hops, "enqueue", req)
+        if self.hedge_after_s is not None and req.hedged_from is None:
+            self._push(self.now + self.hedge_after_s, "maybe_hedge", req)
+
+    def _on_enqueue(self, req: Request):
+        w = self.workers[req._worker]
+        if not w.healthy:
+            self._record_fail(req, "worker died")
+            return
+        w.queue.append(req)
+        self._dispatch(w)
+
+    def _on_maybe_hedge(self, req: Request):
+        if req.rid in self._finished:
+            return
+        clone = Request(fn=req.fn, arrival_t=self.now, payload=req.payload,
+                        size=req.size, hedged_from=req.rid)
+        self._on_arrival(clone)
+
+    def _on_fail(self, worker: str):
+        w = self.workers[worker]
+        w.healthy = False
+        for req in w.queue:
+            self._record_fail(req, "worker died")
+        w.queue.clear()
+        w.instances.clear()
+        self._refresh_view(w)
+
+    def _on_recover(self, worker: str):
+        self.workers[worker].healthy = True
+        self._refresh_view(self.workers[worker])
+
+    # ----------------------------------------------------- worker mechanics
+    def _dispatch(self, w: _Worker):
+        if not w.healthy:
+            return
+        still = []
+        # free slots on still-warming instances: queue onto those before
+        # spawning more replicas (c=1 instances expose 0 extra slots, so
+        # Lambda-style one-instance-per-request behaviour is preserved)
+        warming_free: Dict[str, int] = {}
+        for fn, il in w.instances.items():
+            warming_free[fn] = sum(
+                (i.slots if i.slots > 0 else 10 ** 9) - i.busy
+                for i in il if i.ready_t > self.now)
+        for req in w.queue:
+            cfg = self.store.get(req.fn)
+            if self.now - req.arrival_t > cfg.timeout_s:
+                self._record_fail(req, "queue timeout")
+                continue
+            inst = self._pick_instance(w, cfg)
+            if inst is not None:
+                self._start_service(w, inst, req, cfg)
+                continue
+            if warming_free.get(cfg.name, 0) > 0:
+                warming_free[cfg.name] -= 1       # wait on a warming instance
+                nxt = min(i.ready_t for i in w.instances[cfg.name]
+                          if i.ready_t > self.now)
+                self._poke(w, nxt)
+                still.append(req)
+                continue
+            inst = self._maybe_start_instance(w, cfg)
+            if inst is not None:
+                warming_free[cfg.name] = warming_free.get(cfg.name, 0) \
+                    + (inst.slots if inst.slots > 0 else 10 ** 9) - 1
+                self._poke(w, inst.ready_t)
+            still.append(req)
+        w.queue = still
+        self._refresh_view(w)
+
+    def _poke(self, w: "_Worker", t: float):
+        key = round(t, 9)
+        if key not in w.poke_times:
+            w.poke_times.add(key)
+            self._push(t, "poke", w.name)
+
+    def _on_poke(self, worker: str):
+        w = self.workers[worker]
+        w.poke_times.discard(round(self.now, 9))
+        self._dispatch(w)
+
+    def _pick_instance(self, w: _Worker, cfg) -> Optional[_Instance]:
+        best = None
+        for inst in w.instances.get(cfg.name, []):
+            if inst.ready_t <= self.now and inst.has_free_slot():
+                if best is None or inst.busy > best.busy:   # pack densest first
+                    best = inst
+        return best
+
+    def _maybe_start_instance(self, w: _Worker, cfg) -> Optional[_Instance]:
+        il = w.instances.setdefault(cfg.name, [])
+        total_inst = sum(len(x) for x in w.instances.values())
+        if len(il) >= cfg.max_instances_per_worker or total_inst >= w.capacity_slots:
+            return None
+        cold = cfg.cold_start_s or self.cold_default
+        inst = _Instance(iid=f"{w.name}/i{next(self._iid)}", fn=cfg.name,
+                         slots=cfg.concurrency,
+                         ready_t=self.now + cold * w.slowdown,
+                         last_used=self.now)
+        il.append(inst)
+        w.cold_starts += 1
+        w.instances_started += 1
+        return inst
+
+    def _start_service(self, w: _Worker, inst: _Instance, req: Request, cfg):
+        inst.busy += 1
+        inst.last_used = self.now
+        cold = inst.ready_t > req.arrival_t
+        dur, ok = self.model.sample(
+            cfg, batch_size=inst.busy, queue_len=len(w.queue),
+            prompt=req.size, cold=cold, fn_cost=self.fn_cost(req.fn))
+        dur *= w.slowdown
+        # unlimited concurrency: utilization-triggered replica pre-start
+        if cfg.concurrency == 0:
+            util = inst.busy / max(cfg.max_instances_per_worker, 1)
+            if util > cfg.util_scale_threshold:
+                self._maybe_start_instance(w, cfg)
+        rec = self.telemetry[req._telemetry_idx]
+        rec.batch_size = inst.busy
+        rec.cold = cold
+        self._push(self.now + dur, "finish",
+                   (req, w.name, inst.iid, cold, self.now, ok))
+        w.busy_time += dur
+
+    def _on_finish(self, payload):
+        req, wname, iid, cold, start_t, ok = payload
+        w = self.workers[wname]
+        for il in w.instances.values():
+            for inst in il:
+                if inst.iid == iid:
+                    inst.busy -= 1
+                    inst.last_used = self.now
+                    self._push(self.now + self.store.get(req.fn).idle_timeout_s,
+                               "idle_check", (wname, iid))
+        primary = req.hedged_from or req.rid
+        if primary in self._finished:
+            return                       # hedge lost the race
+        self._finished.add(primary)
+        res = RequestResult(rid=primary, fn=req.fn, ok=ok,
+                            arrival_t=req.arrival_t, start_t=start_t,
+                            finish_t=self.now, cold_start=cold,
+                            worker=wname, instance=iid)
+        self.results.append(res)
+        rec = self.telemetry[req._telemetry_idx]
+        rec.latency = res.latency
+        rec.ok = ok
+        self._dispatch(w)
+
+    def _on_idle_check(self, payload):
+        wname, iid = payload
+        w = self.workers[wname]
+        for fn, il in w.instances.items():
+            for inst in list(il):
+                if (inst.iid == iid and inst.busy == 0 and
+                        self.now - inst.last_used >=
+                        self.store.get(fn).idle_timeout_s - 1e-9):
+                    il.remove(inst)
+        self._refresh_view(w)
+
+    def _record_fail(self, req: Request, err: str):
+        primary = req.hedged_from or req.rid
+        if primary in self._finished:
+            return
+        self._finished.add(primary)
+        self.results.append(RequestResult(
+            rid=primary, fn=req.fn, ok=False, arrival_t=req.arrival_t,
+            start_t=self.now, finish_t=self.now, cold_start=False,
+            worker=getattr(req, "_worker", "?"), instance="-", error=err))
+
+
+# ---------------------------------------------------------------------------
+# Load generation + metrics
+# ---------------------------------------------------------------------------
+
+def poisson_load(sim: Simulator, *, fn: str, rps: float, duration_s: float,
+                 prompt_tokens: int = 16, seed: int = 1):
+    rng = random.Random(seed)
+    t = 0.0
+    n = 0
+    while t < duration_s:
+        t += rng.expovariate(rps)
+        sim.submit(Request(fn=fn, arrival_t=t, size=prompt_tokens))
+        n += 1
+    return n
+
+
+def summarize(results: List[RequestResult]) -> dict:
+    import numpy as np
+    if not results:
+        return {"n": 0}
+    lat = np.array([r.latency for r in results if r.ok])
+    ok = sum(r.ok for r in results)
+    return {
+        "n": len(results), "ok": ok, "fail_rate": 1 - ok / len(results),
+        "cold_rate": sum(r.cold_start for r in results) / len(results),
+        "p50": float(np.percentile(lat, 50)) if len(lat) else float("nan"),
+        "p95": float(np.percentile(lat, 95)) if len(lat) else float("nan"),
+        "p99": float(np.percentile(lat, 99)) if len(lat) else float("nan"),
+        "mean": float(lat.mean()) if len(lat) else float("nan"),
+        "throughput": (ok / max(max(r.finish_t for r in results), 1e-9)),
+    }

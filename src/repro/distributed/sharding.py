@@ -1,0 +1,212 @@
+"""Logical-axis sharding rules with divisibility fallback (MaxText-style).
+
+Every tensor dim carries a logical name (``w_*`` for weights, ``act_*`` for
+activations). A :class:`RuleSet` maps logical names to a priority list of mesh
+axis tuples. Resolution is *global-priority* (rules-dict order), not dim order:
+e.g. in decode, ``act_kv_heads`` is tried before ``act_kv_seq``, so GQA caches
+shard by head when the head count divides the axis (moonshot kv=16, phi3 kv=32)
+and fall back to flash-decode-style sequence sharding otherwise (kv=8 archs) —
+the per-arch sharding choices in DESIGN.md §5 emerge from divisibility alone.
+
+Mesh-axis candidates absent from the mesh degrade gracefully: ``("pod","data")``
+on the single-pod mesh behaves as ``("data",)`` — one rule table serves both
+production meshes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[Optional[str], ...]
+RuleTable = Dict[str, Sequence[Tuple[str, ...]]]
+
+
+# --------------------------------------------------------------------------
+# Baseline rule tables (the paper-faithful starting point; §Perf iterates)
+# --------------------------------------------------------------------------
+
+TRAIN_RULES: RuleTable = {
+    # weights — TP over `model`, FSDP (ZeRO-3) over `data` on the other dim
+    "w_vocab": [("model",)],
+    "w_qdim": [("model",)],
+    "w_kvdim": [("model",)],
+    "w_mlp": [("model",)],
+    "w_expert": [("model",)],          # EP when E % axis == 0 (moonshot, jamba)
+    "w_moe_mlp": [("model",)],         # picks up TP when w_expert fell through (grok)
+    "w_dinner": [("model",)],
+    "w_embed": [("data",)],            # FSDP dim (pod added per-arch, see
+    "w_state": [],                     # rules_for_cfg: grok/jamba only)
+    "w_layers": [],
+    # activations
+    "act_batch": [("pod", "data")],
+    "act_heads": [("model",)],
+    "act_kv_heads": [("model",)],
+    "act_mlp": [("model",)],
+    "act_vocab": [("model",)],
+    "act_expert": [("model",)],
+    "act_seq": [],
+    "act_embed": [],
+    "act_kv_seq": [],
+}
+
+# prefill returns the full KV cache: shard kv_heads (else kv_seq) over model
+# like decode, or an 88-layer 32k cache lands 23 GiB/device unsharded.
+PREFILL_RULES: RuleTable = {**TRAIN_RULES,
+                            "act_kv_heads": [("model",)],
+                            "act_kv_seq": [("model",)]}
+_prf = PREFILL_RULES.pop("act_kv_seq")  # reinsert AFTER kv_heads for priority
+PREFILL_RULES["act_kv_seq"] = _prf
+
+DECODE_RULES: RuleTable = {
+    "w_vocab": [("model",)],
+    "w_qdim": [("model",)],
+    "w_kvdim": [("model",)],
+    "w_mlp": [("model",)],
+    "w_expert": [("model",)],
+    "w_moe_mlp": [("model",)],
+    "w_dinner": [("model",)],
+    "w_embed": [("data",)],            # weights stay 2D-sharded for HBM fit
+    "w_state": [],
+    "w_layers": [],
+    # WEIGHT-STATIONARY decode (§Perf iteration 2): the residual stream is
+    # feature-sharded over `data` — aligned with the weights' FSDP dim — so
+    # every matmul contracts locally and only [B, d]-sized partial sums
+    # all-reduce. act_embed resolves BEFORE act_batch: on the x stream the
+    # data axis goes to features (batch keeps `pod`); cache tensors have no
+    # act_embed, so their batch dim still takes (pod, data) for HBM fit.
+    "act_embed": [("data",)],
+    "act_batch": [("pod", "data")],
+    "act_kv_heads": [("model",)],      # tried BEFORE kv_seq (priority order)
+    "act_kv_seq": [("model",)],        # flash-decode fallback for kv=8 archs
+    "act_heads": [("model",)],
+    "act_mlp": [("model",)],
+    "act_vocab": [("model",)],
+    "act_expert": [("model",)],
+    "act_seq": [],
+}
+
+LONG_DECODE_RULES: RuleTable = {
+    # batch=1: context parallelism — cache sequence over every available axis
+    "act_kv_seq": [("pod", "data", "model"), ("data", "model")],
+    "w_vocab": [("model",)],
+    "w_qdim": [("model",)],
+    "w_kvdim": [("model",)],
+    "w_mlp": [("model",)],
+    "w_expert": [("model",)],
+    "w_moe_mlp": [("model",)],
+    "w_dinner": [("model",)],
+    "w_embed": [("data",)],
+    "w_state": [],
+    "w_layers": [],
+    "act_embed": [("data",)],          # weight-stationary stream (batch=1)
+    "act_batch": [("pod", "data")],
+    "act_kv_heads": [],
+    "act_heads": [("model",)],
+    "act_mlp": [("model",)],
+    "act_vocab": [("model",)],
+    "act_expert": [("model",)],
+    "act_seq": [],
+}
+
+RULES_BY_MODE: Dict[str, RuleTable] = {
+    "train": TRAIN_RULES,
+    "prefill": PREFILL_RULES,
+    "decode": DECODE_RULES,
+    "long_decode": LONG_DECODE_RULES,
+}
+
+
+# --------------------------------------------------------------------------
+# Resolver
+# --------------------------------------------------------------------------
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def resolve_spec(mesh: Mesh, shape: Tuple[int, ...], names: Axes,
+                 rules: RuleTable, *, for_constraint: bool = False) -> P:
+    """PartitionSpec for one tensor, honoring global rule priority + no-reuse.
+
+    ``for_constraint=True`` (activation ``with_sharding_constraint`` use):
+    dims whose rule failed divisibility become ``P.UNCONSTRAINED`` instead of
+    replicated — GSPMD may then factor them (e.g. deepseek's 56 heads tile
+    8-way on half the 16-way model axis).  jit in/out shardings must stay
+    concrete, so the default keeps replication on failure.
+    """
+    assert len(shape) == len(names), (shape, names)
+    assignment: Dict[int, Tuple[str, ...]] = {}
+    failed: set = set()
+    used: set = set()
+    # iterate logical names in RULES order (= priority), then dims in order
+    for lname in rules:
+        for dim, n in enumerate(names):
+            if n != lname or dim in assignment:
+                continue
+            tried = False
+            for cand in rules[lname]:
+                eff = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+                if not eff:
+                    continue
+                tried = True
+                size = _axis_size(mesh, eff)
+                if size > 1 and shape[dim] % size == 0:
+                    assignment[dim] = eff
+                    used.update(eff)
+                    break
+            if dim in assignment:
+                break  # a logical name is assigned at most once per tensor
+            if tried:
+                failed.add(dim)
+    entries = []
+    for d in range(len(shape)):
+        e = assignment.get(d)
+        if e is not None:
+            entries.append(e[0] if len(e) == 1 else e)
+        elif for_constraint and d in failed:
+            entries.append(P.UNCONSTRAINED)
+        else:
+            entries.append(None)
+    if not for_constraint:
+        while entries and entries[-1] is None:
+            entries.pop()
+    return P(*entries)
+
+
+def make_resolver(mesh: Mesh, rules: RuleTable):
+    """Closure for ``repro.models.layers.sharding_context``."""
+    def resolver(shape, names):
+        spec = resolve_spec(mesh, tuple(shape), tuple(names), rules,
+                            for_constraint=True)
+        return NamedSharding(mesh, spec)
+    return resolver
+
+
+def tree_shardings(mesh: Mesh, spec_tree, axes_tree, rules: RuleTable):
+    """Map (ShapeDtypeStruct tree, logical-axes tree) -> NamedSharding tree."""
+    def one(s, ax):
+        return NamedSharding(mesh, resolve_spec(mesh, s.shape, tuple(ax), rules))
+    return jax.tree.map(one, spec_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def with_shardings(spec_tree, shardings_tree):
+    """Attach shardings to ShapeDtypeStructs (dry-run inputs)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        spec_tree, shardings_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def rules_for_cfg(mode: str, cfg) -> RuleTable:
+    """Per-arch rule adjustments: fsdp_pod extends the weight FSDP axis to
+    (pod, data) — needed by the >300B archs' optimizer state on the multi-pod
+    mesh, a net loss for smaller archs (mistral: memory term +89%)."""
+    rules = dict(RULES_BY_MODE[mode])
+    if mode == "train" and getattr(cfg, "fsdp_pod", False):
+        rules["w_embed"] = [("pod", "data")]
+    return rules

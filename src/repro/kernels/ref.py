@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Materialized-scores attention. q [B,S,H,hd]; k,v [B,S,KV,hd]."""
+    from repro.models.attention import attend_plain
+    return attend_plain(q, k, v, causal=causal, window=window)
+
+
+def decode_attention_ref(q, k_cache, v_cache, positions, *, ring=False):
+    from repro.models.attention import attend_decode
+    return attend_decode(q, k_cache, v_cache, positions, ring=ring, impl="ref")
+
+
+def mamba_scan_ref(dt, x, B, C, A, D):
+    """Sequential recurrence in f64-ish f32. Shapes as kernel wrapper."""
+    Bt, S, DI = x.shape
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A.astype(jnp.float32))
+    bx = (dt * x).astype(jnp.float32)[..., None] * B.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, inp):
+        at, bxt, ct = inp
+        h = at * h + bxt
+        return h, jnp.sum(h * ct[:, None, :], axis=-1)
+
+    h0 = jnp.zeros((Bt, DI, A.shape[1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (a.swapaxes(0, 1), bx.swapaxes(0, 1),
+                                    C.astype(jnp.float32).swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + x.astype(jnp.float32) * D.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def grouped_matmul_ref(x, w, block_to_expert, block_t):
+    """Row-block i uses expert block_to_expert[i]."""
+    T, D = x.shape
+    nt = T // block_t
+    xb = x.reshape(nt, block_t, D)
+    wb = w[block_to_expert]                        # [nt, D, F]
+    y = jnp.einsum("ntd,ndf->ntf", xb, wb)
+    return y.reshape(T, -1).astype(x.dtype)

@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count at first
+#   init, and the production meshes below need 512 placeholder CPU devices.
+#   This is set ONLY here (never in conftest/pyproject): smoke tests and
+#   benchmarks see the single real device.
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, assigned_archs, get_config
+from repro.distributed.sharding import (RULES_BY_MODE, make_resolver,
+                                        rules_for_cfg, tree_shardings,
+                                        with_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models.layers import sharding_context
+from repro.models.transformer import LM
+from repro.telemetry import roofline
+from repro.train.optimizer import make_optimizer
+from repro.train.trainer import make_train_step
+
+HBM_PER_CHIP_GIB = 16.0   # TPU v5e
+
+# The CPU backend emulates bf16 in f32; XLA's loop-invariant code motion then
+# hoists `convert(residual_stack)` out of the backward while-loop, carrying an
+# f32 COPY of the whole [L, B, S, D] stack (+13.6 GiB measured on the 62-layer
+# train cell). TPU has native bf16 — the hoist doesn't exist there — so the
+# dry-run disables that pass to keep memory_analysis a faithful TPU proxy.
+COMPILER_OPTS = {"xla_disable_hlo_passes": "while-loop-invariant-code-motion"}
+
+
+def build_cell(cfg, shape, mesh, rules, model=None):
+    """Returns (fn, example_args(ShapeDtypeStructs w/ shardings), donate, out_shardings)."""
+    model = model or LM(cfg)
+    repl = NamedSharding(mesh, P())
+
+    params_abs = model.abstract_params()
+    params_sh = tree_shardings(mesh, params_abs, model.param_axes(), rules)
+    params_in = with_shardings(params_abs, params_sh)
+
+    batch_abs, batch_axes = model.input_specs(shape)
+    batch_sh = tree_shardings(mesh, batch_abs, batch_axes, rules)
+    batch_in = with_shardings(batch_abs, batch_sh)
+
+    if shape.mode == "train":
+        dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        accum = max(1, min(cfg.grad_accum, shape.global_batch // dp))
+        opt = make_optimizer("auto", 1e-4, cfg)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_sh = tree_shardings(mesh, opt_abs,
+                                opt.state_axes(model.param_axes()), rules)
+        opt_in = with_shardings(opt_abs, opt_sh)
+        step = make_train_step(model, opt, accum=accum)
+        metrics_sh = {"loss": repl, "grad_norm": repl}
+        return (step, (params_in, opt_in, batch_in), (0, 1),
+                (params_sh, opt_sh, metrics_sh))
+
+    if shape.mode == "prefill":
+        if not cfg.causal:
+            # encoder: full-sequence logits, no decode cache
+            def enc(params, batch):
+                x, _ = model.forward_seq(params, batch, want_cache=False,
+                                         remat=False)
+                return model.logits(params, x)
+            logits_sh = NamedSharding(mesh, roofline_spec(mesh, rules, shape, cfg))
+            return enc, (params_in, batch_in), (), logits_sh
+        step = lambda params, batch: model.prefill(params, batch)
+        cache_abs, cache_axes = model.cache_specs(shape.global_batch, shape.seq_len)
+        cache_sh = tree_shardings(mesh, cache_abs, cache_axes, rules)
+        logits_sh = tree_shardings(
+            mesh, jax.ShapeDtypeStruct((shape.global_batch, cfg.vocab_size),
+                                       jnp.dtype(cfg.dtype)),
+            ("act_batch", "act_vocab"), rules)
+        return step, (params_in, batch_in), (), (logits_sh, cache_sh)
+
+    # decode / long_decode
+    cache_abs, cache_axes = model.cache_specs(shape.global_batch, shape.seq_len)
+    cache_sh = tree_shardings(mesh, cache_abs, cache_axes, rules)
+    cache_in = with_shardings(cache_abs, cache_sh)
+    step = lambda params, cache, batch: model.decode_step(params, cache, batch)
+    logits_sh = tree_shardings(
+        mesh, jax.ShapeDtypeStruct((shape.global_batch, cfg.vocab_size),
+                                   jnp.dtype(cfg.dtype)),
+        ("act_batch", "act_vocab"), rules)
+    return step, (params_in, cache_in, batch_in), (1,), (logits_sh, cache_sh)
+
+
+def roofline_spec(mesh, rules, shape, cfg):
+    from repro.distributed.sharding import resolve_spec
+    return resolve_spec(mesh, (shape.global_batch, shape.seq_len, cfg.vocab_size),
+                        ("act_batch", "act_seq", "act_vocab"), rules)
+
+
+def _cost_tuple(compiled):
+    ca = compiled.cost_analysis() or {}
+    stats = roofline.parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "link_bytes": stats.link_bytes,
+            "ops": stats.ops, "raw_bytes": stats.raw_bytes}
+
+
+def _lin(c1, c2, k):
+    """c1 + (k-1)*(c2-c1), element-wise over cost dicts."""
+    out = {}
+    for key in ("flops", "bytes", "link_bytes"):
+        out[key] = max(0.0, c1[key] + (k - 1) * (c2[key] - c1[key]))
+    out["ops"] = {o: int(c1["ops"].get(o, 0)
+                         + (k - 1) * (c2["ops"].get(o, 0) - c1["ops"].get(o, 0)))
+                  for o in set(c1["ops"]) | set(c2["ops"])}
+    out["raw_bytes"] = {o: c1["raw_bytes"].get(o, 0.0)
+                        + (k - 1) * (c2["raw_bytes"].get(o, 0.0)
+                                     - c1["raw_bytes"].get(o, 0.0))
+                        for o in set(c1["raw_bytes"]) | set(c2["raw_bytes"])}
+    return out
+
+
+def _scale(c, f):
+    return {"flops": c["flops"] * f, "bytes": c["bytes"] * f,
+            "link_bytes": c["link_bytes"] * f,
+            "ops": {o: int(v * f) for o, v in c["ops"].items()},
+            "raw_bytes": {o: v * f for o, v in c["raw_bytes"].items()}}
+
+
+def _add(a, b):
+    return {"flops": a["flops"] + b["flops"], "bytes": a["bytes"] + b["bytes"],
+            "link_bytes": a["link_bytes"] + b["link_bytes"],
+            "ops": {o: a["ops"].get(o, 0) + b["ops"].get(o, 0)
+                    for o in set(a["ops"]) | set(b["ops"])},
+            "raw_bytes": {o: a["raw_bytes"].get(o, 0.0) + b["raw_bytes"].get(o, 0.0)
+                          for o in set(a["raw_bytes"]) | set(b["raw_bytes"])}}
+
+
+def probe_costs(cfg, shape, mesh, rules) -> dict:
+    """Exact per-device cost via shallow UNROLLED probes + linear extrapolation.
+
+    XLA's cost_analysis counts while-loop bodies once, so the production
+    (scanned) program under-reports FLOPs/bytes/collectives.  We compile the
+    same cell at 1 and 2 periods with every scan unrolled and extrapolate:
+    total = probe1 + (K-1)*(probe2 - probe1); train cells scale by the
+    grad-accum factor, with the optimizer update probed separately at full
+    depth (it is scan-free, so its costs are exact).
+    """
+    period = LM(cfg).period
+    K = cfg.num_layers // period
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    accum = max(1, min(cfg.grad_accum, shape.global_batch // dp)) \
+        if shape.mode == "train" else 1
+    micro_b = shape.global_batch // accum
+    pshape = replace(shape, global_batch=micro_b)
+
+    probes = []
+    for kp in (1, 2):
+        cfgp = replace(cfg, num_layers=period * kp, grad_accum=1)
+        model = LM(cfgp, unroll=True, attn_block=2048, mamba_chunk=2048)
+        with mesh, sharding_context(make_resolver(mesh, rules)):
+            if shape.mode == "train":
+                params_abs = model.abstract_params()
+                params_sh = tree_shardings(mesh, params_abs, model.param_axes(), rules)
+                batch_abs, batch_axes = model.input_specs(pshape)
+                batch_sh = tree_shardings(mesh, batch_abs, batch_axes, rules)
+
+                def gstep(params, batch):
+                    (_, _), grads = jax.value_and_grad(
+                        model.loss_fn, has_aux=True)(params, batch)
+                    return grads
+                compiled = jax.jit(gstep, out_shardings=params_sh).lower(
+                    with_shardings(params_abs, params_sh),
+                    with_shardings(batch_abs, batch_sh)).compile()
+            else:
+                fn, args, donate, out_sh = build_cell(cfgp, pshape, mesh, rules,
+                                                      model=model)
+                compiled = jax.jit(fn, donate_argnums=donate,
+                                   out_shardings=out_sh).lower(*args).compile()
+        probes.append(_cost_tuple(compiled))
+    cost = _lin(probes[0], probes[1], K)
+    if shape.mode == "train":
+        cost = _scale(cost, accum)
+        # optimizer update at full depth (scan-free => exact)
+        model = LM(cfg)
+        opt = make_optimizer("auto", 1e-4, cfg)
+        params_abs = model.abstract_params()
+        params_sh = tree_shardings(mesh, params_abs, model.param_axes(), rules)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_sh = tree_shardings(mesh, opt_abs,
+                                opt.state_axes(model.param_axes()), rules)
+        acc_dt = jnp.dtype(cfg.opt_state_dtype)
+        grads_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, acc_dt), params_abs)
+        with mesh:
+            compiled = jax.jit(opt.update, out_shardings=(params_sh, opt_sh)).lower(
+                with_shardings(grads_abs, params_sh),
+                with_shardings(opt_abs, opt_sh),
+                with_shardings(params_abs, params_sh)).compile()
+        cost = _add(cost, _cost_tuple(compiled))
+        cost["accum"] = accum
+    return cost
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             save_hlo: bool = False, rules_override=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = applicable_shapes(cfg).get(shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "status": "skip", "reason": skip}
+    if skip:
+        print(f"[dryrun] SKIP {arch} x {shape_name}: {skip}")
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    rules = rules_override or rules_for_cfg(shape.mode, cfg)
+
+    t0 = time.time()
+    fn, args, donate, out_sh = build_cell(cfg, shape, mesh, rules)
+    with mesh, sharding_context(make_resolver(mesh, rules)):
+        lowered = jax.jit(fn, donate_argnums=donate,
+                          out_shardings=out_sh).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile(compiler_options=COMPILER_OPTS)
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    print(ma)                           # proves the cell fits per-device HBM
+    ca = compiled.cost_analysis()
+    print({k: v for k, v in ca.items() if k in ("flops", "bytes accessed")})
+
+    t0 = time.time()
+    cost = probe_costs(cfg, shape, mesh, rules)
+    t_probe = time.time() - t0
+    rep = roofline.analyze_from_parts(
+        ma=ma, cost=cost, arch=arch, shape=shape,
+        mesh_name=mesh_kind, n_devices=n_dev, cfg=cfg)
+    fits = rep.mem["peak_gib"] <= HBM_PER_CHIP_GIB
+    result.update(status="ok", fits=fits, lower_s=round(t_lower, 2),
+                  compile_s=round(t_compile, 2), probe_s=round(t_probe, 2),
+                  report=json.loads(rep.to_json()))
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "
+          f"peak={rep.mem['peak_gib']:.2f}GiB fits={fits} "
+          f"compute={rep.t_compute*1e3:.2f}ms memory={rep.t_memory*1e3:.2f}ms "
+          f"collective={rep.t_collective*1e3:.2f}ms bottleneck={rep.bottleneck} "
+          f"useful={rep.useful_flops_ratio:.3f} roofline_frac={rep.roofline_fraction:.3f}")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1, sort_keys=True)
+        if save_hlo:
+            with open(path.replace(".json", ".hlo.txt"), "w") as f:
+                f.write(compiled.as_text())
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run harness")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for a in assigned_archs():
+            cfg = get_config(a)
+            for s, reason in applicable_shapes(cfg).items():
+                print(f"{a:22s} {s:12s} {'RUN' if reason is None else 'SKIP: ' + reason}")
+        return 0
+
+    assert args.arch and args.shape, "--arch and --shape required (or --list)"
+    try:
+        res = run_cell(args.arch, args.shape, args.mesh, args.out,
+                       save_hlo=args.save_hlo)
+        return 0 if res["status"] in ("ok", "skip") else 1
+    except Exception:
+        traceback.print_exc()
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            path = os.path.join(args.out,
+                                f"{args.arch}__{args.shape}__{args.mesh}.json")
+            with open(path, "w") as f:
+                json.dump({"arch": args.arch, "shape": args.shape,
+                           "mesh": args.mesh, "status": "error",
+                           "error": traceback.format_exc()[-2000:]}, f, indent=1)
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Production mesh construction (prescribed shapes; DESIGN.md §5).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (device count is locked at first jax init, and only
+``launch/dryrun.py`` sets the 512-placeholder-device XLA flag).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(n_devices: int | None = None, *, model_axis: int = 1):
+    """Small mesh over actually-available devices (tests, examples)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,87 @@
+"""Dry-run sweep driver: every (arch × shape × mesh) cell as a subprocess.
+
+Subprocess isolation keeps one cell's compile failure (or RAM spike) from
+killing the sweep, and each process gets a fresh 512-device jax runtime.
+Resumable: cells with an existing status=ok/skip artifact are not re-run
+(pass --force to redo).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import SHAPES, applicable_shapes, assigned_archs, get_config
+
+ART = "artifacts/dryrun"
+
+
+def cell_done(arch, shape, mesh):
+    path = os.path.join(ART, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return False
+    try:
+        with open(path) as f:
+            return json.load(f).get("status") in ("ok", "skip")
+    except Exception:
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--archs", default=",".join(assigned_archs()))
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    cells = []
+    for mesh in args.meshes.split(","):
+        for arch in args.archs.split(","):
+            for shape in SHAPES:
+                cells.append((arch, shape, mesh))
+
+    t_start = time.time()
+    n_ok = n_fail = n_skip = 0
+    for i, (arch, shape, mesh) in enumerate(cells):
+        if not args.force and cell_done(arch, shape, mesh):
+            n_skip += 1
+            continue
+        reason = applicable_shapes(get_config(arch)).get(shape)
+        tag = f"[{i+1}/{len(cells)}] {arch} x {shape} x {mesh}"
+        if reason:
+            # let dryrun.py write the skip artifact quickly (no jax init cost
+            # shortcut: write it here directly)
+            os.makedirs(ART, exist_ok=True)
+            with open(os.path.join(ART, f"{arch}__{shape}__{mesh}.json"), "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "status": "skip", "reason": reason}, f, indent=1)
+            print(f"{tag}: SKIP ({reason})", flush=True)
+            n_skip += 1
+            continue
+        t0 = time.time()
+        p = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", mesh, "--out", ART],
+            capture_output=True, text=True, timeout=args.timeout,
+            env={**os.environ, "PYTHONPATH": "src"})
+        ok = p.returncode == 0
+        n_ok += ok
+        n_fail += (not ok)
+        last = [ln for ln in p.stdout.splitlines() if ln.strip()][-1:] or ["?"]
+        print(f"{tag}: {'OK' if ok else 'FAIL'} ({time.time()-t0:.0f}s) {last[0][:160]}",
+              flush=True)
+        if not ok:
+            err = (p.stderr or "")[-1500:]
+            with open(os.path.join(ART, f"{arch}__{shape}__{mesh}.stderr"), "w") as f:
+                f.write(p.stderr or "")
+            print("      stderr tail:", err.splitlines()[-1] if err else "?", flush=True)
+    print(f"sweep done in {(time.time()-t_start)/60:.1f}min: "
+          f"ok={n_ok} fail={n_fail} skip/cached={n_skip}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

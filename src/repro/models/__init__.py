@@ -1,0 +1,3 @@
+from repro.models.transformer import LM, build_model
+
+__all__ = ["LM", "build_model"]

@@ -1,0 +1,198 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN.md §7).
+
+The container is CPU-only; TPU v5e is the *target*. We therefore derive the
+three roofline terms from the compiled (SPMD-partitioned, per-device) module:
+
+    compute    = flops_per_device              / PEAK_FLOPS      (197e12 bf16)
+    memory     = hbm_bytes_per_device          / HBM_BW          (819e9)
+    collective = ici_link_bytes_per_device     / LINK_BW         (50e9)
+
+``cost_analysis()`` provides per-device FLOPs and bytes. Collective bytes are
+NOT in cost_analysis: we parse the post-partitioning HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, applying ring factors (AR 2(n-1)/n, AG/RS/A2A (n-1)/n,
+CP 1) with n = replica-group size.
+
+Useful-FLOPs ratio: MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D
+(prefill/decode) vs flops_pd × n_devices — catches remat/dispatch/padding waste.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+# --- TPU v5e-class hardware constants (per chip) ---------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link (spec-prescribed constant)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  %all-gather.5 = bf16[16,128]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+@dataclass
+class CollectiveStats:
+    ops: Dict[str, int] = field(default_factory=dict)
+    raw_bytes: Dict[str, float] = field(default_factory=dict)   # operand bytes
+    link_bytes: float = 0.0                                     # ring-adjusted
+
+    def add(self, kind: str, nbytes: float, group_size: int):
+        kind = kind.replace("-start", "")
+        self.ops[kind] = self.ops.get(kind, 0) + 1
+        self.raw_bytes[kind] = self.raw_bytes.get(kind, 0.0) + nbytes
+        n = max(group_size, 1)
+        ring = (n - 1) / n
+        if kind == "all-reduce":
+            self.link_bytes += 2 * nbytes * ring
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            self.link_bytes += nbytes * ring
+        else:  # collective-permute
+            self.link_bytes += nbytes
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum collective operand bytes from post-SPMD per-device HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if not any(k in line for k in _COLL_KINDS):
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = _shape_bytes(dtype, dims)
+        # result of all-gather is the gathered buffer; use result size for AG,
+        # operand (=result here as parsed) for others — both are the transferred
+        # volume under the ring model given the factors applied in add().
+        g = _GROUPS_RE.search(line)
+        if g:
+            group_size = g.group(1).count(",") + 1
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            group_size = int(gi.group(2)) if gi else 2
+        stats.add(kind, nbytes, group_size)
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_pd: float
+    bytes_pd: float
+    coll_link_bytes_pd: float
+    coll_ops: Dict[str, int]
+    coll_raw_bytes: Dict[str, float]
+    mem: Dict[str, float]              # memory_analysis fields (per device)
+    model_flops: float                 # 6·N·D or 2·N·D (total, all devices)
+    # derived:
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_flops_ratio: float = 0.0
+    roofline_fraction: float = 0.0     # model_flops-time / max-term
+
+    def derive(self):
+        self.t_compute = self.flops_pd / PEAK_FLOPS
+        self.t_memory = self.bytes_pd / HBM_BW
+        self.t_collective = self.coll_link_bytes_pd / LINK_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        total_hlo_flops = self.flops_pd * self.n_devices
+        self.useful_flops_ratio = (self.model_flops / total_hlo_flops
+                                   if total_hlo_flops else 0.0)
+        # fraction of the chip's compute roofline that useful FLOPs achieve if
+        # the program runs at the dominant term's speed:
+        t_star = max(terms.values())
+        ideal = self.model_flops / (self.n_devices * PEAK_FLOPS)
+        self.roofline_fraction = ideal / t_star if t_star else 0.0
+        return self
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1, sort_keys=True)
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs per step: 6·N_active·D (train) else 2·N_active·D."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def _mem_dict(ma) -> Dict[str, float]:
+    return {
+        "argument_gib": ma.argument_size_in_bytes / 2**30,
+        "output_gib": ma.output_size_in_bytes / 2**30,
+        "temp_gib": ma.temp_size_in_bytes / 2**30,
+        "alias_gib": ma.alias_size_in_bytes / 2**30,
+        "peak_gib": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30,
+    }
+
+
+def analyze(compiled, *, arch: str, shape, mesh_name: str, n_devices: int,
+            cfg) -> RooflineReport:
+    """Single-compile analysis (exact only for scan-free programs)."""
+    ca = compiled.cost_analysis() or {}
+    stats = parse_collectives(compiled.as_text())
+    rep = RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, n_devices=n_devices,
+        flops_pd=float(ca.get("flops", 0.0)),
+        bytes_pd=float(ca.get("bytes accessed", 0.0)),
+        coll_link_bytes_pd=stats.link_bytes,
+        coll_ops=stats.ops, coll_raw_bytes=stats.raw_bytes,
+        mem=_mem_dict(compiled.memory_analysis()),
+        model_flops=model_flops(cfg, shape))
+    return rep.derive()
+
+
+def analyze_from_parts(*, ma, cost: dict, arch: str, shape, mesh_name: str,
+                       n_devices: int, cfg) -> RooflineReport:
+    """Memory from the full scanned compile; flops/bytes/collectives from the
+    unrolled shallow probes (see launch.dryrun.probe_costs)."""
+    rep = RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, n_devices=n_devices,
+        flops_pd=cost["flops"], bytes_pd=cost["bytes"],
+        coll_link_bytes_pd=cost["link_bytes"],
+        coll_ops=cost["ops"], coll_raw_bytes=cost["raw_bytes"],
+        mem=_mem_dict(ma), model_flops=model_flops(cfg, shape))
+    return rep.derive()

@@ -1,0 +1,178 @@
+"""Optimizers built from scratch (no optax in this environment — and the
+framework needs sharded/low-precision state control anyway).
+
+* :class:`AdamW` — decoupled weight decay, f32 math, configurable state dtype
+  (bf16 state is what lets the 123B/314B/398B train cells fit 16 GB/chip).
+* :class:`Adafactor` — factored second moment for matrices (beyond-paper
+  memory lever recorded in §Perf).
+* :class:`SGDM` — used by the emulation-model fits in ``repro.core``.
+
+All optimizers are pure: ``init(params) -> state``, ``update(grads, state,
+params) -> (new_params, new_state)``. State leaves mirror param shapes, so the
+param sharding resolver applies verbatim to optimizer state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _cast(x, dtype):
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: str = "float32"
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def init(self, params):
+        dt = jnp.dtype(self.state_dtype)
+        z = lambda p: jnp.zeros(p.shape, dt)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def state_axes(self, param_axes):
+        """Logical-axes tree matching init()'s structure (for sharding)."""
+        return {"step": (), "m": param_axes, "v": param_axes}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self._lr(step)
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.state_dtype)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g32
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g32 * g32
+            u = (m32 / c1) / (jnp.sqrt(v32 / c2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * u
+            return new_p.astype(p.dtype), _cast(m32, dt), _cast(v32, dt)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": step, "m": new_m, "v": new_v}
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    """Factored second-moment (Shazeer & Stern). Matrices store row/col stats
+    (O(n+m) instead of O(nm)); vectors fall back to full stats."""
+    lr: Callable | float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def init(self, params):
+        def z(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "stats": jax.tree.map(z, params)}
+
+    def state_axes(self, param_axes):
+        def ax(a):
+            a = tuple(a)
+            if len(a) >= 2:
+                return {"r": a[:-1], "c": a[:-2] + a[-1:]}
+            return {"v": a}
+        return {"step": (),
+                "stats": jax.tree.map(ax, param_axes,
+                                      is_leaf=lambda x: isinstance(x, tuple))}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self._lr(step)
+        beta = 1.0 - (step.astype(jnp.float32)) ** -self.decay
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + self.eps
+            if g.ndim >= 2:
+                r = beta * s["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * s["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), self.eps)
+                v = (r[..., None] / denom[..., None]) * c[..., None, :]
+                u = g32 / jnp.sqrt(v + self.eps)
+                ns = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 / jnp.sqrt(v + self.eps)
+                ns = {"v": v}
+            norm = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, norm / self.clip_threshold)
+            new_p = p.astype(jnp.float32) - lr * u
+            return new_p.astype(p.dtype), ns
+
+        is_stats = lambda x: isinstance(x, dict) and ("r" in x or "v" in x)
+        out = jax.tree.map(upd, grads, state["stats"], params, is_leaf=None)
+        # out leaves are (param, stats) tuples
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.unflatten(treedef, [t[0] for t in flat])
+        new_stats = jax.tree.unflatten(treedef, [t[1] for t in flat])
+        return new_params, {"step": step, "stats": new_stats}
+
+
+@dataclass(frozen=True)
+class SGDM:
+    lr: Callable | float = 1e-2
+    momentum: float = 0.9
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def init(self, params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def state_axes(self, param_axes):
+        return {"step": (), "m": param_axes}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self._lr(step)
+
+        def upd(g, m, p):
+            m32 = self.momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m32).astype(p.dtype), m32
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        return (jax.tree.unflatten(treedef, [t[0] for t in flat]),
+                {"step": step,
+                 "m": jax.tree.unflatten(treedef, [t[1] for t in flat])})
+
+
+def make_optimizer(name: str, lr, cfg=None):
+    if name == "auto" and cfg is not None:
+        name = getattr(cfg, "optimizer", "adamw")
+    if name == "adamw":
+        sd = cfg.opt_state_dtype if cfg is not None else "float32"
+        return AdamW(lr=lr, weight_decay=0.01, state_dtype=sd)
+    if name == "adafactor":
+        return Adafactor(lr=lr)
+    if name == "sgdm":
+        return SGDM(lr=lr)
+    raise ValueError(name)

@@ -1,0 +1,27 @@
+"""LR schedules as pure step->lr callables (jit-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return f
+
+
+def inverse_sqrt(peak: float, warmup_steps: int):
+    def f(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return peak * jnp.minimum(s / max(warmup_steps, 1),
+                                  jnp.sqrt(warmup_steps / s))
+    return f

@@ -1,0 +1,71 @@
+"""Training step construction: grad-accumulation microbatching, remat-friendly
+loss, optional cross-pod gradient compression, and the sharded train loop.
+
+``make_train_step`` is what the dry-run lowers for every ``train_4k`` cell and
+what ``launch/train.py`` executes for real on reduced models.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import LM
+
+
+def _split_microbatches(batch, accum: int):
+    def r(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(model: LM, optimizer, *, accum: Optional[int] = None,
+                    grad_acc_dtype: Optional[str] = None,
+                    grad_transform=None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    accum: number of gradient-accumulation microbatches (defaults to the
+    config's per-arch value). grad_transform: optional fn applied to the mean
+    gradients before the optimizer (e.g. cross-pod compressed all-reduce).
+    """
+    cfg = model.cfg
+    accum = accum or cfg.grad_accum
+    acc_dt = jnp.dtype(grad_acc_dtype or cfg.opt_state_dtype)
+
+    grad_fn = jax.value_and_grad(model.loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if accum > 1:
+            mbs = _split_microbatches(batch, accum)
+
+            def micro(carry, mb):
+                gacc, loss_acc = carry
+                (loss, _metrics), grads = grad_fn(params, mb)
+                gacc = jax.tree.map(lambda a, g: a + g.astype(acc_dt), gacc, grads)
+                return (gacc, loss_acc + loss), None
+
+            gz = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (gsum, loss_sum), _ = jax.lax.scan(micro, (gz, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: (g / accum), gsum)
+            loss = loss_sum / accum
+        else:
+            (loss, _metrics), grads = grad_fn(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def make_eval_step(model: LM):
+    def step(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return metrics | {"loss": loss}
+    return step

@@ -1,0 +1,19 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here by design — smoke tests and benches must see the
+# single real device; only launch/dryrun.py (its own process) forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,93 @@
+"""Assigned-architecture configs: exact spec values + published-size sanity."""
+import pytest
+
+from repro.configs import (SHAPES, applicable_shapes, assigned_archs,
+                           get_config, reduced)
+
+EXPECTED_TOTALS_B = {    # published sizes (phi3 excludes the stubbed CLIP tower;
+    "hubert_xlarge": (0.95, 0.10),       # moonshot uses the assigned 48L, see DESIGN.md)
+    "deepseek_coder_33b": (33.3, 0.05),
+    "mistral_large_123b": (122.6, 0.05),
+    "gemma3_12b": (11.8, 0.10),
+    "qwen3_32b": (32.8, 0.05),
+    "grok1_314b": (314.0, 0.05),
+    "jamba15_large": (398.0, 0.05),
+    "falcon_mamba_7b": (7.0, 0.10),
+    "phi3_vision": (3.8, 0.10),
+}
+
+
+def test_ten_archs_assigned():
+    assert len(assigned_archs()) == 10
+
+
+@pytest.mark.parametrize("arch", assigned_archs())
+def test_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.num_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 0
+
+
+@pytest.mark.parametrize("arch,exp", EXPECTED_TOTALS_B.items())
+def test_param_counts_match_published(arch, exp):
+    target, tol = exp
+    got = get_config(arch).param_count() / 1e9
+    assert abs(got - target) / target < tol, (arch, got, target)
+
+
+def test_moe_active_counts():
+    grok = get_config("grok1_314b")
+    assert grok.active_param_count() < 0.3 * grok.param_count()
+    jamba = get_config("jamba15_large")
+    assert 80e9 < jamba.active_param_count() < 110e9   # ~94B published
+
+
+def test_exact_assigned_specs():
+    q = get_config("qwen3_32b")
+    assert (q.num_layers, q.d_model, q.num_heads, q.num_kv_heads,
+            q.d_ff, q.vocab_size, q.qk_norm) == (64, 5120, 64, 8, 25600, 151936, True)
+    g = get_config("gemma3_12b")
+    assert (g.sliding_window, g.swa_local, g.swa_period) == (1024, 5, 6)
+    j = get_config("jamba15_large")
+    assert (j.attn_every, j.moe.num_experts, j.moe.top_k, j.moe.every) == (8, 16, 2, 2)
+    m = get_config("moonshot_v1_16b")
+    assert (m.moe.num_experts, m.moe.top_k, m.moe.expert_ff) == (64, 6, 1408)
+    f = get_config("falcon_mamba_7b")
+    assert f.attention_free and f.mamba.d_state == 16
+
+
+def test_shape_table():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+def test_cell_skip_rules():
+    total_run = total_skip = 0
+    for a in assigned_archs():
+        app = applicable_shapes(get_config(a))
+        total_run += sum(v is None for v in app.values())
+        total_skip += sum(v is not None for v in app.values())
+    assert total_run == 32 and total_skip == 8
+    assert applicable_shapes(get_config("hubert_xlarge"))["decode_32k"]
+    assert applicable_shapes(get_config("gemma3_12b"))["long_500k"] is None
+    assert applicable_shapes(get_config("qwen3_32b"))["long_500k"] is not None
+
+
+@pytest.mark.parametrize("arch", assigned_archs())
+def test_reduced_preserves_family(arch):
+    cfg = get_config(arch)
+    r = reduced(cfg)
+    assert r.family == cfg.family
+    assert (r.moe is None) == (cfg.moe is None)
+    assert (r.mamba is None) == (cfg.mamba is None)
+    assert r.num_layers % max(r.swa_period if r.sliding_window else 1,
+                              r.attn_every if r.mamba and not r.attention_free else 1) == 0
+    if cfg.num_kv_heads:
+        assert r.num_heads % r.num_kv_heads == 0
+
+
+def test_config_json_roundtrip():
+    from repro.configs.base import ModelConfig
+    cfg = get_config("jamba15_large")
+    assert ModelConfig.from_json(cfg.to_json()) == cfg

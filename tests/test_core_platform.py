@@ -1,0 +1,166 @@
+"""HyperFaaS core: router tree, simulator lifecycle, RQ-A policies, faults."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.config_store import ConfigStore, ImageRegistry
+from repro.core.router import (LBNode, StateView, WorkerState, build_tree,
+                               replicate)
+from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                  poisson_load, summarize)
+from repro.core.types import FunctionConfig, Request
+
+
+@pytest.fixture
+def store():
+    s = ConfigStore()
+    s.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                         cold_start_s=0.2, idle_timeout_s=5.0))
+    return s
+
+
+def _sim(store, workers=8, **kw):
+    tree = build_tree(workers, fanout=4)
+    return Simulator(tree, store, SyntheticServiceModel(seed=2), seed=5, **kw)
+
+
+# ----------------------------------------------------------------- router
+def test_tree_shape_and_routing():
+    tree = build_tree(64, fanout=8)
+    assert len(tree.all_workers()) == 64
+    view, rng = StateView(), random.Random(0)
+    for i in range(200):
+        w, hops = tree.route(Request(fn="fn", arrival_t=0.0), view, rng)
+        assert w in tree.all_workers()
+        assert hops == 2            # 64 workers/fanout 8 => leaf + root
+
+
+def test_replicate_recipe():
+    base = build_tree(16, fanout=4)
+    doubled = replicate(base, times=2)
+    assert len(doubled.all_workers()) == 32
+    assert doubled.policy_name == "random"      # stateless front LB (paper)
+    quad = replicate(base, times=4)
+    assert len(quad.all_workers()) == 64
+    assert len(set(quad.all_workers())) == 64   # fresh worker ids
+
+
+def test_warm_affinity_prefers_warm():
+    from repro.core.router import warm_affinity_policy
+    view = StateView()
+    view.update(WorkerState("w0", warm_fns=frozenset({"fn"}), inflight=3,
+                            capacity=4))
+    view.update(WorkerState("w1", warm_fns=frozenset(), inflight=0, capacity=4))
+    rng = random.Random(0)
+    req = Request(fn="fn", arrival_t=0.0)
+    picks = {warm_affinity_policy(req, ["w0", "w1"], view, rng, 0.0)
+             for _ in range(20)}
+    assert picks == {"w0"}
+
+
+def test_state_view_staleness():
+    view = StateView(staleness_s=10.0)
+    view.update(WorkerState("w0", queue_len=0), t=0.0)
+    view.update(WorkerState("w0", queue_len=99), t=1.0)   # within staleness
+    assert view.get("w0", t=1.0).queue_len == 0           # stale snapshot
+
+
+def test_elastic_add_remove_branch(store):
+    sim = _sim(store, workers=4)
+    from repro.core.router import build_leaf
+    sim.add_branch(build_leaf("leaf-new", ["wx0", "wx1"]))
+    assert "wx0" in sim.tree.all_workers()
+    sim.remove_branch("leaf-new")
+    assert "wx0" not in sim.tree.all_workers()
+
+
+# -------------------------------------------------------------- simulator
+def test_sim_deterministic(store):
+    r1 = summarize(_run_load(_sim(store)))
+    r2 = summarize(_run_load(_sim(store)))
+    assert r1 == r2
+
+
+def _run_load(sim, rps=100, dur=10):
+    poisson_load(sim, fn="fn", rps=rps, duration_s=dur, seed=4)
+    return sim.run()
+
+
+def test_all_requests_resolve(store):
+    sim = _sim(store)
+    n = poisson_load(sim, fn="fn", rps=200, duration_s=10, seed=4)
+    res = sim.run()
+    assert len(res) == n
+    assert len({r.rid for r in res}) == n
+
+
+def test_within_instance_concurrency_rq_a(store):
+    """c=1 must start far more instances than c=8 under the same load."""
+    out = {}
+    for c in (1, 8):
+        store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=c,
+                                 cold_start_s=0.2, max_instances_per_worker=16))
+        sim = _sim(store, workers=8)
+        poisson_load(sim, fn="fn", rps=150, duration_s=10, seed=4)
+        sim.run()
+        out[c] = sum(w.instances_started for w in sim.workers.values())
+    assert out[1] > 2 * out[8], out
+
+
+def test_queue_timeout_fails_requests(store):
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=1,
+                             timeout_s=0.05, cold_start_s=1.0,
+                             max_instances_per_worker=1))
+    sim = _sim(store, workers=1)
+    poisson_load(sim, fn="fn", rps=300, duration_s=3, seed=4)
+    s = summarize(sim.run())
+    assert s["fail_rate"] > 0.2
+
+
+def test_failure_injection_and_recovery(store):
+    sim = _sim(store, workers=4)
+    sim.inject_failure("w0", at=2.0, recover_after=3.0)
+    poisson_load(sim, fn="fn", rps=50, duration_s=10, seed=4)
+    res = sim.run()
+    died = [r for r in res if not r.ok and r.error == "worker died"]
+    late_ok = [r for r in res if r.ok and r.worker == "w0" and r.arrival_t > 6.0]
+    assert late_ok, "w0 must serve again after recovery"
+    assert summarize(res)["fail_rate"] < 0.2
+
+
+def test_hedging_cuts_straggler_tail(store):
+    def tail(hedge):
+        sim = _sim(store, workers=4, hedge_after_s=0.08 if hedge else None)
+        sim.set_straggler("w1", 30.0)
+        poisson_load(sim, fn="fn", rps=40, duration_s=20, seed=4)
+        return summarize(sim.run())["p99"]
+    assert tail(True) < 0.6 * tail(False)
+
+
+def test_idle_instances_reaped(store):
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                             cold_start_s=0.1, idle_timeout_s=1.0))
+    sim = _sim(store, workers=2)
+    sim.submit(Request(fn="fn", arrival_t=0.0))
+    sim.submit(Request(fn="fn", arrival_t=30.0))   # long gap => reap between
+    res = sim.run()
+    assert all(r.cold_start for r in res), "second request must cold start again"
+
+
+# ------------------------------------------------------------ config store
+def test_config_store_versioning(store):
+    assert store.version("fn") == 1
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=2))
+    assert store.version("fn") == 2
+    assert store.get("fn").concurrency == 2
+    with pytest.raises(KeyError):
+        store.get("nope")
+
+
+def test_image_registry():
+    reg = ImageRegistry()
+    reg.register("tiny_lm", lambda: "built")
+    assert reg.pull("tiny_lm")() == "built"
+    with pytest.raises(KeyError):
+        reg.pull("missing")

@@ -1,0 +1,115 @@
+"""Prefill+decode == full forward (f32 exact; the system's key invariant).
+
+MoE runs with no-drop capacity (capacity routing is not length-invariant by
+design — Switch semantics); bf16 drift is covered by a loose sanity bound.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+
+FAMILIES = ["deepseek_coder_33b", "gemma3_12b", "qwen3_32b", "moonshot_v1_16b",
+            "falcon_mamba_7b", "jamba15_large", "phi3_vision"]
+
+
+def _prep(arch, dtype):
+    cfg = reduced(get_config(arch))
+    cfg = replace(cfg, dtype=dtype)
+    if cfg.moe is not None:
+        cfg = replace(cfg, moe=replace(cfg.moe,
+                                       capacity_factor=float(cfg.moe.num_experts)))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_parity_f32_exact(arch, rng):
+    cfg = _prep(arch, "float32")
+    m = build_model(cfg, attn_block=8)
+    params = m.init_params(rng)
+    B, S, S0 = 2, 24, 16
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.frontend == "patches":
+        batch["patch_embeds"] = jax.random.normal(
+            rng, (B, cfg.num_patches, cfg.d_model), jnp.float32)
+
+    x, _ = m.forward_seq(params, batch, want_cache=False)
+    full = np.asarray(m.logits(params, x), np.float32)
+
+    b0 = {k: (v[:, :S0] if k == "tokens" else v) for k, v in batch.items()}
+    lg, cache = jax.jit(m.prefill)(params, b0)
+    np.testing.assert_allclose(np.asarray(lg, np.float32), full[:, S0 - 1],
+                               rtol=2e-3, atol=2e-3)
+
+    cache_w = m.init_cache(B, S)
+    cache = jax.tree.map(
+        lambda d, s: s if s.shape == d.shape
+        else d.at[:, :, :s.shape[2]].set(s.astype(d.dtype)), cache_w, cache)
+    dec = jax.jit(m.decode_step)
+    for t in range(S0, S):
+        lg, cache = dec(params, cache,
+                        {"token": toks[:, t], "pos": jnp.full((B,), t, jnp.int32)})
+        np.testing.assert_allclose(np.asarray(lg, np.float32), full[:, t],
+                                   rtol=2e-3, atol=2e-3, err_msg=f"{arch} t={t}")
+
+
+def test_parity_bf16_bounded(rng):
+    """bf16 drift stays bounded (exactness is the f32 test's job)."""
+    cfg = _prep("qwen3_32b", "bfloat16")
+    m = build_model(cfg, attn_block=8)
+    params = m.init_params(rng)
+    B, S, S0 = 2, 20, 16
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    x, _ = m.forward_seq(params, {"tokens": toks}, want_cache=False)
+    full = np.asarray(m.logits(params, x), np.float32)
+    lg, cache = m.prefill(params, {"tokens": toks[:, :S0]})
+    cache_w = m.init_cache(B, S)
+    cache = jax.tree.map(
+        lambda d, s: s if s.shape == d.shape
+        else d.at[:, :, :s.shape[2]].set(s.astype(d.dtype)), cache_w, cache)
+    errs = []
+    for t in range(S0, S):
+        lg, cache = m.decode_step(params, cache,
+                                  {"token": toks[:, t],
+                                   "pos": jnp.full((B,), t, jnp.int32)})
+        errs.append(np.max(np.abs(np.asarray(lg, np.float32) - full[:, t])))
+    assert max(errs) < 0.25, errs
+
+
+def test_ring_buffer_local_cache(rng):
+    """gemma3 local slots keep a ring cache of width == sliding_window."""
+    cfg = _prep("gemma3_12b", "float32")
+    m = build_model(cfg, attn_block=8)
+    B, S = 1, 48
+    W = cfg.sliding_window
+    assert W < S
+    specs, _ = m.cache_specs(B, S)
+    widths = [sl["k"].shape[2] for sl in specs["slots"] if "k" in sl]
+    assert sorted(set(widths)) == [W, S]
+
+    params = m.init_params(rng)
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    x, _ = m.forward_seq(params, {"tokens": toks}, want_cache=False)
+    full = np.asarray(m.logits(params, x), np.float32)
+    S0 = 32
+    lg, cache = m.prefill(params, {"tokens": toks[:, :S0]})
+    cache_w = m.init_cache(B, S)
+
+    def blend(d, s):
+        if s.shape == d.shape:
+            return s
+        if d.shape[2] == W and s.shape[2] == W:
+            return s
+        return d.at[:, :, :s.shape[2]].set(s.astype(d.dtype))
+    cache = jax.tree.map(blend, cache_w, cache)
+    for t in range(S0, S):
+        lg, cache = m.decode_step(params, cache,
+                                  {"token": toks[:, t],
+                                   "pos": jnp.full((B,), t, jnp.int32)})
+        np.testing.assert_allclose(np.asarray(lg, np.float32), full[:, t],
+                                   rtol=3e-3, atol=3e-3, err_msg=f"t={t}")

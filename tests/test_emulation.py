@@ -1,0 +1,104 @@
+"""RQ-B emulation pipeline: model fits, simulator adapter, fidelity metric."""
+import numpy as np
+import pytest
+
+from repro.core.config_store import ConfigStore
+from repro.core.emulation import (EmulatedServiceModel, MLPWorkerModel,
+                                  RidgeWorkerModel, fidelity_report,
+                                  telemetry_matrix)
+from repro.core.router import build_tree
+from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                  poisson_load, summarize)
+from repro.core.types import FunctionConfig, TelemetryRecord
+
+
+def _synth_records(n=4000, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = []
+    for _ in range(n):
+        q = rng.integers(0, 10)
+        b = rng.integers(1, 8)
+        cold = rng.random() < 0.1
+        pt = rng.integers(8, 64)
+        lat = float(np.exp(0.02 * q + 0.08 * b + 1.2 * cold + 0.01 * pt
+                           + rng.normal(0, 0.05)) * 0.01)
+        recs.append(TelemetryRecord(fn="fn", t=0.0, queue_len=int(q),
+                                    inflight=int(b - 1), batch_size=int(b),
+                                    cold=cold, prompt_tokens=int(pt),
+                                    gen_tokens=8, fn_cost=1.0, latency=lat,
+                                    ok=rng.random() > 0.01))
+    return recs
+
+
+def test_ridge_recovers_structure():
+    recs = _synth_records()
+    X, y, ok = telemetry_matrix(recs)
+    model = RidgeWorkerModel.fit(X, y, ok)
+    rng = np.random.default_rng(1)
+    # predictions ordered correctly: cold >> warm, batch 8 > batch 1
+    f_warm = np.array([0, 0, 1, 0, 16, 8, 1.0], np.float32)
+    f_cold = np.array([0, 0, 1, 1, 16, 8, 1.0], np.float32)
+    p_warm = np.median([model.predict(f_warm, rng)[0] for _ in range(50)])
+    p_cold = np.median([model.predict(f_cold, rng)[0] for _ in range(50)])
+    assert p_cold > 2.0 * p_warm
+    assert model.fail_rate == pytest.approx(0.01, abs=0.01)
+
+
+def test_mlp_beats_or_matches_ridge_rmse():
+    recs = _synth_records()
+    X, y, ok = telemetry_matrix(recs)
+    ridge = RidgeWorkerModel.fit(X, y, ok)
+    mlp = MLPWorkerModel.fit(X, y, ok, steps=300)
+    rng = np.random.default_rng(2)
+
+    def rmse(m):
+        errs = []
+        for i in range(0, len(X), 7):
+            pred, _ = m.predict(X[i], rng)
+            errs.append((np.log(pred + 1e-6) - np.log(y[i] + 1e-6)) ** 2)
+        return float(np.sqrt(np.mean(errs)))
+    assert rmse(mlp) < rmse(ridge) * 1.3
+
+
+def test_emulated_sim_fidelity():
+    """Paper Fig. 2 loop closed: real sim -> fit -> emulated sim -> compare."""
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                             cold_start_s=0.2))
+    real = Simulator(build_tree(8, fanout=4), store,
+                     SyntheticServiceModel(seed=2), seed=5)
+    poisson_load(real, fn="fn", rps=150, duration_s=15, seed=4)
+    real_res = real.run()
+
+    X, y, ok = telemetry_matrix([r for r in real.telemetry if r.latency > 0])
+    model = RidgeWorkerModel.fit(X, y, ok)
+    emu = Simulator(build_tree(8, fanout=4), store,
+                    EmulatedServiceModel(model, seed=0), seed=5)
+    poisson_load(emu, fn="fn", rps=150, duration_s=15, seed=4)
+    emu_res = emu.run()
+
+    rep = fidelity_report(np.array([r.latency for r in real_res if r.ok]),
+                          np.array([r.latency for r in emu_res if r.ok]))
+    assert rep["p50_rel_err"] < 0.25
+    assert rep["p95_rel_err"] < 0.35
+    assert rep["mean_rel_err"] < 0.25
+
+
+def test_emulation_scales_to_1000_workers():
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                             cold_start_s=0.2))
+    recs = _synth_records(1000)
+    X, y, ok = telemetry_matrix(recs)
+    model = RidgeWorkerModel.fit(X, y, ok)
+    sim = Simulator(build_tree(1024, fanout=16), store,
+                    EmulatedServiceModel(model), seed=1)
+    n = poisson_load(sim, fn="fn", rps=2000, duration_s=5, seed=4)
+    s = summarize(sim.run())
+    assert s["n"] == n and s["fail_rate"] < 0.05
+
+
+def test_fidelity_report_identity():
+    x = np.random.default_rng(0).lognormal(0, 0.3, 5000)
+    rep = fidelity_report(x, x)
+    assert rep["ks"] < 1e-9 and rep["p99_rel_err"] < 1e-9

@@ -1,0 +1,111 @@
+"""Per-arch smoke: reduced config, one forward/train step on CPU, finite."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import assigned_archs, get_config, reduced
+from repro.models import build_model
+
+
+def make_batch(cfg, rng, B=2, S=32):
+    if cfg.frontend == "frames":
+        return {"frames": jax.random.normal(rng, (B, S, cfg.d_model), jnp.bfloat16),
+                "labels": jnp.zeros((B, S), jnp.int32),
+                "loss_mask": jnp.ones((B, S), jnp.float32)}
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    b = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "patches":
+        b["patch_embeds"] = jax.random.normal(
+            rng, (B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", assigned_archs())
+def test_smoke_forward_and_grads(arch, rng):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg, attn_block=16)
+    params = model.init_params(rng)
+    batch = make_batch(cfg, rng)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    x, _ = model.forward_seq(params, batch, want_cache=False)
+    assert x.shape == (2, 32, cfg.d_model)
+    assert np.isfinite(np.asarray(x, np.float32)).all()
+    g = jax.jit(jax.grad(lambda p, b: model.loss_fn(p, b)[0]))(params, batch)
+    gsum = sum(float(jnp.sum(jnp.abs(l.astype(jnp.float32))))
+               for l in jax.tree.leaves(g))
+    assert np.isfinite(gsum) and gsum > 0, arch
+
+
+@pytest.mark.parametrize("arch", ["qwen3_32b", "jamba15_large", "falcon_mamba_7b"])
+def test_unroll_matches_scan(arch, rng):
+    cfg = reduced(get_config(arch))
+    scan_m = build_model(cfg, attn_block=16)
+    unroll_m = build_model(cfg, attn_block=16, unroll=True)
+    params = scan_m.init_params(rng)
+    batch = make_batch(cfg, rng)
+    l1 = scan_m.loss_fn(params, batch)[0]
+    l2 = unroll_m.loss_fn(params, batch)[0]
+    np.testing.assert_allclose(float(l1), float(l2), rtol=2e-2)
+
+
+def test_abstract_params_match_init(rng):
+    cfg = reduced(get_config("qwen3_32b"))
+    model = build_model(cfg)
+    abs_p = model.abstract_params()
+    real_p = model.init_params(rng)
+    ja, jr = jax.tree.leaves(abs_p), jax.tree.leaves(real_p)
+    assert len(ja) == len(jr)
+    for a, r in zip(ja, jr):
+        assert a.shape == r.shape and a.dtype == r.dtype
+
+
+def test_param_axes_structure():
+    cfg = reduced(get_config("jamba15_large"))
+    model = build_model(cfg)
+    axes = model.param_axes()
+    abs_p = model.abstract_params()
+    for ax, leaf in zip(jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple)),
+                        jax.tree.leaves(abs_p)):
+        assert len(ax) == len(leaf.shape)
+
+
+def test_input_specs_cover_all_shapes():
+    from repro.configs import SHAPES
+    cfg = reduced(get_config("phi3_vision"))
+    model = build_model(cfg)
+    for s in SHAPES.values():
+        specs, axes = model.input_specs(s)
+        assert set(specs) == set(axes)
+
+
+def test_vlm_patch_scatter(rng):
+    cfg = reduced(get_config("phi3_vision"))
+    model = build_model(cfg)
+    params = model.init_params(rng)
+    batch = make_batch(cfg, rng)
+    x1 = model.embed_input(params, batch)
+    b2 = dict(batch)
+    b2["patch_embeds"] = batch["patch_embeds"] + 1.0
+    x2 = model.embed_input(params, b2)
+    np_ = cfg.num_patches
+    assert not np.allclose(np.asarray(x1[:, :np_], np.float32),
+                           np.asarray(x2[:, :np_], np.float32))
+    np.testing.assert_array_equal(np.asarray(x1[:, np_:], np.float32),
+                                  np.asarray(x2[:, np_:], np.float32))
+
+
+def test_gemma3_local_global_slots():
+    cfg = get_config("gemma3_12b")
+    model = build_model(cfg)
+    kinds = [sk.is_local for sk in model.slots]
+    assert kinds == [True] * 5 + [False]
+    assert model.slots[0].theta == 10000.0 and model.slots[5].theta == 1000000.0
+
+
+def test_jamba_interleave_slots():
+    cfg = get_config("jamba15_large")
+    model = build_model(cfg)
+    assert [sk.kind for sk in model.slots] == ["mamba"] * 7 + ["attn"]
+    assert [sk.is_moe for sk in model.slots] == [False, True] * 4

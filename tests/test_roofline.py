@@ -1,0 +1,86 @@
+"""Roofline analyzer: HLO collective parsing, ring factors, term math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.telemetry import roofline as R
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,2048]{1,0} all-gather(bf16[2,2048]{1,0} %p0), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %p1), replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = f32[128,64]{1,0} reduce-scatter(f32[1024,64]{1,0} %p2), replica_groups={{0,1}}, dimensions={0}
+  %cp = bf16[64]{0} collective-permute(bf16[64]{0} %p3), source_target_pairs={{0,1}}
+  %a2a = s32[256]{0} all-to-all(s32[256]{0} %p4), replica_groups={{0,1,2,3}}
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = R.parse_collectives(HLO)
+    assert st.ops == {"all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+                      "collective-permute": 1, "all-to-all": 1}
+    ag = 16 * 2048 * 2
+    ar = 1024 * 4
+    rs = 128 * 64 * 4
+    cp = 64 * 2
+    a2a = 256 * 4
+    assert st.raw_bytes["all-gather"] == ag
+    expected = (ag * 7 / 8            # group of 8
+                + 2 * ar * 15 / 16    # iota [16,16] => group size 16
+                + rs * 1 / 2
+                + cp
+                + a2a * 3 / 4)
+    assert abs(st.link_bytes - expected) < 1e-6
+
+
+def test_ring_factor_all_reduce_doubles():
+    one = R.parse_collectives(
+        "%ar = f32[100]{0} all-reduce(f32[100]{0} %x), replica_groups={{0,1}}\n")
+    assert one.link_bytes == pytest.approx(2 * 400 * 0.5)
+
+
+def test_model_flops_modes():
+    cfg = get_config("qwen3_32b")
+    n = cfg.active_param_count()
+    assert R.model_flops(cfg, SHAPES["train_4k"]) == pytest.approx(
+        6 * n * 256 * 4096)
+    assert R.model_flops(cfg, SHAPES["prefill_32k"]) == pytest.approx(
+        2 * n * 32 * 32768)
+    assert R.model_flops(cfg, SHAPES["decode_32k"]) == pytest.approx(2 * n * 128)
+    moe = get_config("grok1_314b")
+    assert R.model_flops(moe, SHAPES["train_4k"]) < \
+        6 * moe.param_count() * 256 * 4096 / 2
+
+
+def test_report_derivation():
+    rep = R.RooflineReport(
+        arch="a", shape="train_4k", mesh="single", n_devices=256,
+        flops_pd=197e12, bytes_pd=819e9 * 2, coll_link_bytes_pd=50e9 * 0.5,
+        coll_ops={}, coll_raw_bytes={}, mem={"peak_gib": 1.0},
+        model_flops=197e12 * 256 * 0.5).derive()
+    assert rep.t_compute == pytest.approx(1.0)
+    assert rep.t_memory == pytest.approx(2.0)
+    assert rep.t_collective == pytest.approx(0.5)
+    assert rep.bottleneck == "memory"
+    assert rep.useful_flops_ratio == pytest.approx(0.5)
+    assert rep.roofline_fraction == pytest.approx(0.25)   # 0.5 ideal / 2.0
+
+
+def test_small_compiled_program_end_to_end():
+    """Full analyze() on a real (single-device) compiled program."""
+    from repro.configs import SHAPES
+
+    def f(x, w):
+        return jnp.tanh(x @ w).sum()
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    comp = jax.jit(f).lower(x, w).compile()
+    cfg = get_config("tiny_lm")
+    rep = R.analyze(comp, arch="tiny_lm", shape=SHAPES["decode_32k"],
+                    mesh_name="single", n_devices=1, cfg=cfg)
+    assert rep.flops_pd >= 2 * 128 * 256 * 512
+    assert rep.t_compute > 0 and rep.bottleneck in ("compute", "memory",
+                                                    "collective")
