@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_emulation          RQ-B (paper §III.B) — fidelity + emulation speedup
   bench_serving_engine     real-model worker throughput (Fig.2 step 1 rig)
   bench_kernels            Pallas kernel microbench (interpret) vs oracle
+  bench_workload_scenarios named traffic shapes + >=1M-request bursty probe
   bench_sim_throughput     simulator events/s (testbed capacity)
   roofline_table           dry-run artifacts summary (if sweep has run)
 """
@@ -183,6 +184,62 @@ def bench_kernels():
          "S=256;DI=128;N=16")
 
 
+def bench_workload_scenarios():
+    """Named workload shapes (repro.workloads) end-to-end, then a ≥1M-
+    request bursty multi-function capacity probe reporting events/s."""
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import build_tree
+    from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                      summarize)
+    from repro.core.types import FunctionConfig
+    from repro.workloads import (BurstyArrivals, FunctionProfile,
+                                 MixedWorkload, SizeDist, build_scenario,
+                                 install_demo_configs)
+    for name in ("steady", "flash_crowd", "daily_cycle", "multi_tenant"):
+        wl = build_scenario(name, duration_s=10.0, seed=3)
+        store = ConfigStore()
+        install_demo_configs(store, wl)
+        sim = Simulator(build_tree(16, fanout=4), store,
+                        SyntheticServiceModel(seed=2), seed=7)
+        n = sim.load(wl)
+        t0 = time.perf_counter()
+        s = summarize(sim.run())
+        wall = time.perf_counter() - t0
+        _row(f"scenario_{name}", 1e6 * s["p99"],
+             f"n={n};p50_ms={s['p50']*1e3:.1f};cold={s['cold_rate']:.3f};"
+             f"fail={s['fail_rate']:.3f};events_per_s="
+             f"{sim.events_processed/max(wall,1e-9):.0f}")
+    # capacity probe: MMPP bursts over a three-tenant mix, ≥1M requests
+    store = ConfigStore()
+    for fn in ("chat", "embed", "batch"):
+        store.put(FunctionConfig(name=fn, arch="tiny_lm", concurrency=8,
+                                 cold_start_s=0.1, idle_timeout_s=30.0,
+                                 max_instances_per_worker=16))
+    profiles = [
+        FunctionProfile("chat", weight=6.0, size=SizeDist.lognormal(24, 0.5)),
+        FunctionProfile("embed", weight=3.0, size=SizeDist.uniform(8, 48)),
+        FunctionProfile("batch", weight=1.0, size=SizeDist.const(96)),
+    ]
+    wl = MixedWorkload(
+        BurstyArrivals(rate_on=40000.0, rate_off=10000.0,
+                       mean_on_s=1.0, mean_off_s=3.0),
+        profiles, duration_s=64.0, seed=3)
+    sim = Simulator(build_tree(512, fanout=16), store,
+                    SyntheticServiceModel(seed=2), seed=7)
+    t0 = time.perf_counter()
+    n = sim.load(wl)
+    t_gen = time.perf_counter() - t0
+    assert n >= 1_000_000, f"capacity probe must drive >=1M requests, got {n}"
+    t0 = time.perf_counter()
+    s = summarize(sim.run())
+    wall = time.perf_counter() - t0
+    _row("scenario_bursty_1m", 1e6 * wall / n,
+         f"requests={n};events={sim.events_processed};"
+         f"events_per_s={sim.events_processed/wall:.0f};"
+         f"req_per_s={n/wall:.0f};gen_s={t_gen:.1f};"
+         f"p99_ms={s['p99']*1e3:.1f};fail={s['fail_rate']:.4f}")
+
+
 def bench_sim_throughput():
     from repro.core.config_store import ConfigStore
     from repro.core.router import build_tree
@@ -225,7 +282,7 @@ def roofline_table():
 
 BENCHES = [bench_tree_scaling, bench_lb_policies, bench_concurrency,
            bench_emulation, bench_serving_engine, bench_kernels,
-           bench_sim_throughput, roofline_table]
+           bench_workload_scenarios, bench_sim_throughput, roofline_table]
 
 
 def main() -> None:

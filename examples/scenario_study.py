@@ -1,0 +1,63 @@
+"""Scenario study: drive the router tree + elastic scaling under every
+named workload shape (repro.workloads) and compare how the same platform
+architecture fares per shape — the RQ-A/RQ-B experiment loop in miniature.
+
+Run:  PYTHONPATH=src python examples/scenario_study.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.config_store import ConfigStore
+from repro.core.router import build_leaf, build_tree
+from repro.core.simulator import Simulator, SyntheticServiceModel, summarize
+from repro.workloads import build_scenario, install_demo_configs
+
+
+def run_shape(name: str, **overrides):
+    wl = build_scenario(name, duration_s=20.0, seed=3, **overrides)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_tree(16, fanout=4, leaf_policy="warm_affinity"),
+                    store, SyntheticServiceModel(seed=2), seed=7)
+    n = sim.load(wl)
+    s = summarize(sim.run())
+    print(f"{name:>14s}: n={n:6d} p50={s['p50']*1e3:7.1f}ms "
+          f"p99={s['p99']*1e3:7.1f}ms cold={s['cold_rate']:.3f} "
+          f"fail={s['fail_rate']:.3f}")
+    return s
+
+
+def elastic_under_flash_crowd():
+    """The paper's replicate-recipe applied live, mid-flash-crowd: scale
+    out when the burst hits and watch the tail come back down."""
+    wl = build_scenario("flash_crowd", base_rps=100.0, burst_rps=2500.0,
+                        duration_s=20.0, seed=3)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_tree(8, fanout=4), store,
+                    SyntheticServiceModel(seed=2), seed=7,
+                    worker_capacity_slots=16)
+    sim.load(wl)
+    sim.run(until=8.0)
+    mid = summarize(sim.results)
+    # scale out live: added workers inherit the configured capacity
+    sim.add_branch(build_leaf("leaf-burst", [f"wb{i}" for i in range(8)]))
+    sim.run()
+    end = summarize(sim.results)
+    print(f"\nelastic flash_crowd:  8 workers t<8s  p99={mid['p99']*1e3:.1f}ms"
+          f" fail={mid['fail_rate']:.3f}")
+    print(f"elastic flash_crowd: 16 workers total p99={end['p99']*1e3:.1f}ms"
+          f" fail={end['fail_rate']:.3f}  (branch added live at t=8s)")
+
+
+def main():
+    print("=== same 16-worker warm-affinity tree, four traffic shapes ===")
+    run_shape("steady")
+    run_shape("flash_crowd")
+    run_shape("daily_cycle")
+    run_shape("multi_tenant")
+    elastic_under_flash_crowd()
+
+
+if __name__ == "__main__":
+    main()

@@ -67,8 +67,10 @@ def round_robin_policy():
     state = {"i": 0}
 
     def policy(req, workers, view, rng, t):
-        state["i"] = (state["i"] + 1) % len(workers)
-        return workers[state["i"]]
+        # post-increment so the very first call lands on workers[0]
+        w = workers[state["i"] % len(workers)]
+        state["i"] += 1
+        return w
     return policy
 
 

@@ -103,6 +103,7 @@ class Simulator:
         self.hedge_after_s = hedge_after_s
         self.cold_default = cold_start_default_s
         self.hop_s = network_hop_s
+        self.worker_capacity_slots = worker_capacity_slots
         self.workers: Dict[str, _Worker] = {
             w: _Worker(w, capacity_slots=worker_capacity_slots)
             for w in tree.all_workers()}
@@ -111,6 +112,7 @@ class Simulator:
         self._seq = itertools.count()
         self._iid = itertools.count()
         self.now = 0.0
+        self.events_processed = 0
         self.results: List[RequestResult] = []
         self.telemetry: List[TelemetryRecord] = []
         self._finished: set = set()
@@ -133,7 +135,8 @@ class Simulator:
     def add_branch(self, node: LBNode):
         self.tree.add_branch(node)
         for w in node.all_workers():
-            self.workers[w] = _Worker(w)
+            self.workers[w] = _Worker(
+                w, capacity_slots=self.worker_capacity_slots)
         self._worker_list = list(self.workers)
 
     def remove_branch(self, name: str):
@@ -150,13 +153,21 @@ class Simulator:
                 self._fn_cost[fn] = 1.0
         return self._fn_cost[fn]
 
+    def load(self, workload) -> int:
+        """Submit every request of a ``repro.workloads`` workload;
+        returns the request count."""
+        return workload.submit_to(self)
+
     # ---------------------------------------------------------------- run
     def run(self, until: Optional[float] = None):
         while self._events:
-            t, _, kind, payload = heapq.heappop(self._events)
+            t, seq, kind, payload = heapq.heappop(self._events)
             if until is not None and t > until:
+                # re-queue so a later run() resumes without losing the event
+                heapq.heappush(self._events, (t, seq, kind, payload))
                 break
             self.now = t
+            self.events_processed += 1
             getattr(self, f"_on_{kind}")(payload)
         return self.results
 
@@ -319,7 +330,8 @@ class Simulator:
                     inst.last_used = self.now
                     self._push(self.now + self.store.get(req.fn).idle_timeout_s,
                                "idle_check", (wname, iid))
-        primary = req.hedged_from or req.rid
+        # rid 0 is falsy, so `or` would misattribute a hedge of request 0
+        primary = req.hedged_from if req.hedged_from is not None else req.rid
         if primary in self._finished:
             return                       # hedge lost the race
         self._finished.add(primary)
@@ -345,7 +357,7 @@ class Simulator:
         self._refresh_view(w)
 
     def _record_fail(self, req: Request, err: str):
-        primary = req.hedged_from or req.rid
+        primary = req.hedged_from if req.hedged_from is not None else req.rid
         if primary in self._finished:
             return
         self._finished.add(primary)
@@ -361,14 +373,16 @@ class Simulator:
 
 def poisson_load(sim: Simulator, *, fn: str, rps: float, duration_s: float,
                  prompt_tokens: int = 16, seed: int = 1):
-    rng = random.Random(seed)
-    t = 0.0
-    n = 0
-    while t < duration_s:
-        t += rng.expovariate(rps)
-        sim.submit(Request(fn=fn, arrival_t=t, size=prompt_tokens))
-        n += 1
-    return n
+    """Legacy single-function Poisson driver; now a thin shim over the
+    workload subsystem (``repro.workloads``). ``rid_base=None`` keeps the
+    process-global request-id counter this entry point always used."""
+    from repro.workloads import (FunctionProfile, MixedWorkload,
+                                 PoissonArrivals, SizeDist)
+    wl = MixedWorkload(
+        PoissonArrivals(rps),
+        [FunctionProfile(fn, size=SizeDist.const(prompt_tokens))],
+        duration_s=duration_s, seed=seed, rid_base=None)
+    return sim.load(wl)
 
 
 def summarize(results: List[RequestResult]) -> dict:

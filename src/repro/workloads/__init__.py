@@ -1,0 +1,23 @@
+"""Workload scenario subsystem: arrival processes, multi-function mixes,
+and a named-scenario registry. See ROADMAP.md ("Workload scenarios") for
+the extension guide."""
+from repro.workloads.arrivals import (ARRIVALS, ArrivalProcess,
+                                      BurstyArrivals, DiurnalArrivals,
+                                      PoissonArrivals, TraceArrivals,
+                                      get_arrival, iats_from_times,
+                                      read_trace, register_arrival,
+                                      write_trace)
+from repro.workloads.scenarios import (SCENARIOS, build_scenario,
+                                       install_demo_configs, list_scenarios,
+                                       register_scenario)
+from repro.workloads.workload import (FunctionProfile, MixedWorkload,
+                                      SizeDist)
+
+__all__ = [
+    "ARRIVALS", "ArrivalProcess", "PoissonArrivals", "BurstyArrivals",
+    "DiurnalArrivals", "TraceArrivals", "get_arrival", "register_arrival",
+    "read_trace", "write_trace", "iats_from_times",
+    "SCENARIOS", "build_scenario", "list_scenarios", "register_scenario",
+    "install_demo_configs",
+    "FunctionProfile", "MixedWorkload", "SizeDist",
+]

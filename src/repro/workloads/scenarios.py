@@ -1,0 +1,135 @@
+"""Named workload scenarios — the testbed's one-line experiment menu.
+
+Each scenario is a factory registered under a short name; overrides are
+plain keyword arguments, so configs / CLIs can build any shape with one
+call::
+
+    wl = build_scenario("flash_crowd", duration_s=20.0, seed=3)
+    wl.submit_to(sim)
+
+Scenario -> paper mapping: ``steady``/``flash_crowd``/``daily_cycle``
+stress RQ-A's within-instance concurrency policies under shapes where
+cold-start amortisation differs; ``multi_tenant`` gives the RQ-B worker
+model heterogeneous (fn, prompt-size) cost classes to learn;
+``trace_replay`` grounds both in recorded production traffic.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.core.types import FunctionConfig
+from repro.workloads.arrivals import (BurstyArrivals, DiurnalArrivals,
+                                      PoissonArrivals, TraceArrivals)
+from repro.workloads.workload import FunctionProfile, MixedWorkload, SizeDist
+
+SCENARIOS: Dict[str, Callable[..., MixedWorkload]] = {}
+
+
+def register_scenario(name: str):
+    def deco(fn):
+        SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+def build_scenario(name: str, **overrides) -> MixedWorkload:
+    if name not in SCENARIOS:
+        raise KeyError(f"scenario {name!r} not registered "
+                       f"(have: {sorted(SCENARIOS)})")
+    return SCENARIOS[name](**overrides)
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+@register_scenario("steady")
+def steady(*, fn: str = "fn", rps: float = 200.0, duration_s: float = 30.0,
+           prompt_tokens: int = 16, seed: int = 1,
+           rid_base: Optional[int] = 0) -> MixedWorkload:
+    """Baseline homogeneous Poisson load on a single function."""
+    return MixedWorkload(
+        PoissonArrivals(rps),
+        [FunctionProfile(fn, size=SizeDist.const(prompt_tokens))],
+        duration_s=duration_s, seed=seed, rid_base=rid_base)
+
+
+@register_scenario("flash_crowd")
+def flash_crowd(*, fn: str = "fn", base_rps: float = 50.0,
+                burst_rps: float = 1500.0, mean_burst_s: float = 2.0,
+                mean_calm_s: float = 10.0, duration_s: float = 30.0,
+                seed: int = 1, rid_base: Optional[int] = 0) -> MixedWorkload:
+    """MMPP on/off: calm background traffic punctured by sharp spikes —
+    the shape that punishes slow cold starts and stale LB state."""
+    return MixedWorkload(
+        BurstyArrivals(rate_on=burst_rps, rate_off=base_rps,
+                       mean_on_s=mean_burst_s, mean_off_s=mean_calm_s),
+        [FunctionProfile(fn, size=SizeDist.lognormal(24, 0.5))],
+        duration_s=duration_s, seed=seed, rid_base=rid_base)
+
+
+@register_scenario("daily_cycle")
+def daily_cycle(*, fn: str = "fn", mean_rps: float = 150.0,
+                amplitude: float = 0.9, period_s: float = 60.0,
+                duration_s: float = 60.0, seed: int = 1,
+                rid_base: Optional[int] = 0) -> MixedWorkload:
+    """Sinusoidal diurnal envelope, compressed to ``period_s`` per "day"
+    so a full peak/trough cycle fits in one simulator run."""
+    return MixedWorkload(
+        DiurnalArrivals(base_rate=mean_rps, amplitude=amplitude,
+                        period_s=period_s),
+        [FunctionProfile(fn, size=SizeDist.const(16))],
+        duration_s=duration_s, seed=seed, rid_base=rid_base)
+
+
+@register_scenario("multi_tenant")
+def multi_tenant(*, rps: float = 300.0, duration_s: float = 30.0,
+                 seed: int = 1, rid_base: Optional[int] = 0) -> MixedWorkload:
+    """Three tenants with distinct cost classes: chat (frequent, small),
+    embed (mid), batch (rare, huge prompts). Feeds RQ-B two+ cost
+    classes and exercises warm-affinity routing."""
+    profiles = [
+        FunctionProfile("chat", weight=6.0, size=SizeDist.lognormal(32, 0.6)),
+        FunctionProfile("embed", weight=3.0, size=SizeDist.uniform(8, 64)),
+        FunctionProfile("batch", weight=1.0,
+                        size=SizeDist.choice([256, 512, 1024],
+                                             [0.5, 0.3, 0.2])),
+    ]
+    return MixedWorkload(PoissonArrivals(rps), profiles,
+                         duration_s=duration_s, seed=seed, rid_base=rid_base)
+
+
+@register_scenario("trace_replay")
+def trace_replay(*, path: str, fn: str = "fn",
+                 duration_s: Optional[float] = None, loop: bool = False,
+                 prompt_tokens: int = 16, seed: int = 1,
+                 rid_base: Optional[int] = 0) -> MixedWorkload:
+    """Replay a recorded IAT trace file exactly (Azure-Functions-style)."""
+    return MixedWorkload(
+        TraceArrivals.from_file(path, loop=loop),
+        [FunctionProfile(fn, size=SizeDist.const(prompt_tokens))],
+        duration_s=duration_s, seed=seed, rid_base=rid_base)
+
+
+# defaults used when a scenario function name has no explicit config:
+# (arch, concurrency, cold_start_s) per well-known tenant name.
+_DEMO_CFG = {
+    "chat": ("tiny_lm", 4, 0.15),
+    "embed": ("tiny_lm", 8, 0.10),
+    "batch": ("small_lm", 1, 0.40),
+}
+
+
+def install_demo_configs(store, workload: MixedWorkload) -> None:
+    """Register a sensible FunctionConfig for every fn in the mix that the
+    store does not already know — lets examples/benches run any scenario
+    without per-function boilerplate."""
+    for fn in workload.fns():
+        try:
+            store.get(fn)
+            continue
+        except KeyError:
+            pass
+        arch, conc, cold = _DEMO_CFG.get(fn, ("tiny_lm", 4, 0.2))
+        store.put(FunctionConfig(name=fn, arch=arch, concurrency=conc,
+                                 cold_start_s=cold))

@@ -1,0 +1,129 @@
+"""Multi-function workload mixes layered on top of an arrival process.
+
+A :class:`MixedWorkload` binds one arrival process to a weighted set of
+:class:`FunctionProfile`\\ s, each with its own prompt-size distribution —
+the heterogeneous-tenant traffic under which platform architectures
+actually diverge. Two independent RNG streams (arrivals vs. mix) are
+derived from one seed, so adding a function to the mix never perturbs the
+arrival times.
+
+Determinism contract: same seed => byte-identical ``Request`` stream
+(including ``rid``\\ s when ``rid_base`` is set, the default), and hence a
+byte-identical ``RequestResult`` stream out of a seeded ``Simulator``.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional, Sequence
+
+from repro.core.types import Request
+from repro.workloads.arrivals import ArrivalProcess
+
+
+@dataclass(frozen=True)
+class SizeDist:
+    """Seeded prompt-size sampler. Kinds: const | uniform | lognormal |
+    choice. Construct via the classmethods; ``sample`` draws from the
+    workload's mix RNG so it stays on the determinism contract."""
+
+    dist: str = "const"
+    a: float = 16.0                    # const value / lo / median
+    b: float = 0.0                     # hi / sigma
+    values: Sequence[int] = ()
+    weights: Sequence[float] = ()
+
+    @classmethod
+    def const(cls, n: int) -> "SizeDist":
+        return cls("const", a=n)
+
+    @classmethod
+    def uniform(cls, lo: int, hi: int) -> "SizeDist":
+        return cls("uniform", a=lo, b=hi)
+
+    @classmethod
+    def lognormal(cls, median: float, sigma: float = 0.6) -> "SizeDist":
+        return cls("lognormal", a=median, b=sigma)
+
+    @classmethod
+    def choice(cls, values: Sequence[int],
+               weights: Optional[Sequence[float]] = None) -> "SizeDist":
+        return cls("choice", values=tuple(values),
+                   weights=tuple(weights or [1.0] * len(values)))
+
+    def sample(self, rng: random.Random) -> int:
+        if self.dist == "const":
+            return int(self.a)
+        if self.dist == "uniform":
+            return rng.randint(int(self.a), int(self.b))
+        if self.dist == "lognormal":
+            import math
+            return max(1, round(self.a * math.exp(
+                rng.gauss(0.0, self.b))))
+        if self.dist == "choice":
+            return rng.choices(self.values, weights=self.weights, k=1)[0]
+        raise ValueError(f"unknown size distribution {self.dist!r}")
+
+
+@dataclass(frozen=True)
+class FunctionProfile:
+    """One tenant function in a mix: routing weight + prompt-size shape."""
+
+    fn: str
+    weight: float = 1.0
+    size: SizeDist = field(default_factory=lambda: SizeDist.const(16))
+
+
+class MixedWorkload:
+    """Weighted multi-function request stream over an arrival process.
+
+    ``rid_base`` (default 0) assigns request ids deterministically from
+    that base, which is what makes two same-seed runs byte-identical.
+    Pass ``rid_base=None`` to fall back to the process-global id counter
+    (legacy ``poisson_load`` behaviour), or distinct bases when
+    submitting several workloads into one simulator.
+    """
+
+    def __init__(self, arrivals: ArrivalProcess,
+                 profiles: Sequence[FunctionProfile], *,
+                 duration_s: Optional[float], seed: int = 1,
+                 rid_base: Optional[int] = 0):
+        if not profiles:
+            raise ValueError("MixedWorkload needs at least one profile")
+        self.arrivals = arrivals
+        self.profiles = list(profiles)
+        self.duration_s = duration_s
+        self.seed = seed
+        self.rid_base = rid_base
+        self._weights = [p.weight for p in self.profiles]
+
+    def fns(self) -> List[str]:
+        return [p.fn for p in self.profiles]
+
+    def requests(self) -> Iterator[Request]:
+        arr_rng = random.Random(self.seed)
+        mix_rng = random.Random(f"mix-{self.seed}")
+        rids = itertools.count(self.rid_base) if self.rid_base is not None \
+            else None
+        single = self.profiles[0] if len(self.profiles) == 1 else None
+        for t in self.arrivals.times(self.duration_s, arr_rng):
+            p = single if single is not None else mix_rng.choices(
+                self.profiles, weights=self._weights, k=1)[0]
+            size = p.size.sample(mix_rng)
+            if rids is None:
+                yield Request(fn=p.fn, arrival_t=t, size=size)
+            else:
+                yield Request(fn=p.fn, arrival_t=t, size=size,
+                              rid=next(rids))
+
+    def generate(self) -> List[Request]:
+        return list(self.requests())
+
+    def submit_to(self, sim) -> int:
+        """Feed every request into a Simulator; returns the count."""
+        n = 0
+        for req in self.requests():
+            sim.submit(req)
+            n += 1
+        return n

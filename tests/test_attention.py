@@ -23,6 +23,7 @@ def _mk(c, rng):
     return q, k, v
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("case", CASES)
 def test_blocked_matches_plain_fwd_and_grad(case, rng):
     q, k, v = _mk(case, rng)

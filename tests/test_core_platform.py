@@ -46,6 +46,18 @@ def test_replicate_recipe():
     assert len(set(quad.all_workers())) == 64   # fresh worker ids
 
 
+def test_round_robin_visits_all_workers_in_order():
+    """Post-increment: the very first call must land on worker 0, then
+    cycle w0,w1,w2,w0,... (the seed bug skipped w0 on the first pass)."""
+    from repro.core.router import round_robin_policy
+    policy = round_robin_policy()
+    workers = ["w0", "w1", "w2"]
+    view, rng = StateView(), random.Random(0)
+    req = Request(fn="fn", arrival_t=0.0)
+    picks = [policy(req, workers, view, rng, 0.0) for _ in range(7)]
+    assert picks == ["w0", "w1", "w2", "w0", "w1", "w2", "w0"]
+
+
 def test_warm_affinity_prefers_warm():
     from repro.core.router import warm_affinity_policy
     view = StateView()
@@ -73,6 +85,41 @@ def test_elastic_add_remove_branch(store):
     assert "wx0" in sim.tree.all_workers()
     sim.remove_branch("leaf-new")
     assert "wx0" not in sim.tree.all_workers()
+
+
+def test_add_branch_preserves_worker_capacity(store):
+    """Live-added workers must inherit the simulator's configured
+    capacity, not the dataclass default of 16 (seed regression)."""
+    from repro.core.router import build_leaf
+    from repro.workloads import build_scenario
+    sim = _sim(store, workers=4, worker_capacity_slots=2)
+    sim.add_branch(build_leaf("leaf-new", ["wx0", "wx1"]))
+    assert sim.workers["wx0"].capacity_slots == 2
+    assert sim.workers["wx0"].capacity_slots == sim.workers["w0"].capacity_slots
+    # elastic-scaling scenario: a flash crowd on the grown tree must never
+    # push any worker (original or added) past its instance capacity
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=1,
+                             cold_start_s=0.05, timeout_s=0.5,
+                             max_instances_per_worker=8))
+    wl = build_scenario("flash_crowd", duration_s=5.0, seed=3)
+    sim.load(wl)
+    peak = {}
+    orig = Simulator._maybe_start_instance
+
+    def spy(self, w, cfg):
+        inst = orig(self, w, cfg)
+        if inst is not None:
+            cur = sum(len(il) for il in w.instances.values())
+            peak[w.name] = max(peak.get(w.name, 0), cur)
+        return inst
+    Simulator._maybe_start_instance = spy
+    try:
+        sim.run()
+    finally:
+        Simulator._maybe_start_instance = orig
+    served = {r.worker for r in sim.results if r.ok}
+    assert served & {"wx0", "wx1"}, "added branch must serve traffic"
+    assert peak and max(peak.values()) <= 2, peak
 
 
 # -------------------------------------------------------------- simulator
@@ -127,6 +174,37 @@ def test_failure_injection_and_recovery(store):
     late_ok = [r for r in res if r.ok and r.worker == "w0" and r.arrival_t > 6.0]
     assert late_ok, "w0 must serve again after recovery"
     assert summarize(res)["fail_rate"] < 0.2
+
+
+def test_run_until_resume_loses_no_events(store):
+    """run(until) must re-queue the event it peeked past so a later
+    run() resumes losslessly (the elastic-scaling driver pattern)."""
+    sim = _sim(store)
+    n = poisson_load(sim, fn="fn", rps=200, duration_s=5, seed=4)
+    sim.run(until=2.0)
+    res = sim.run()
+    assert len(res) == n
+
+
+def test_hedging_with_rid_zero_keeps_results_straight(store):
+    """A hedge clone of request 0 must resolve to primary rid 0 (rid 0 is
+    falsy — `hedged_from or rid` misattributed it), and clone rids from
+    the global counter must never displace workload-assigned rids."""
+    from repro.workloads import build_scenario
+    sim = _sim(store, workers=4, hedge_after_s=0.05)
+    wl = build_scenario("steady", rps=100.0, duration_s=5.0, seed=4)
+    by_rid = {r.rid: r for r in wl.generate()}
+    for req in by_rid.values():
+        sim.submit(req)
+    res = sim.run()
+    assert len(res) == len(by_rid)
+    assert {r.rid for r in res} == set(by_rid)
+    for r in res:
+        # a winning hedge clone legitimately reports arrival + hedge delay;
+        # anything else means a clone displaced an unrelated request
+        orig = by_rid[r.rid].arrival_t
+        assert (r.arrival_t == orig
+                or abs(r.arrival_t - (orig + 0.05)) < 1e-9), r.rid
 
 
 def test_hedging_cuts_straggler_tail(store):

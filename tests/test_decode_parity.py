@@ -26,6 +26,7 @@ def _prep(arch, dtype):
     return cfg
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", FAMILIES)
 def test_parity_f32_exact(arch, rng):
     cfg = _prep(arch, "float32")
@@ -58,6 +59,7 @@ def test_parity_f32_exact(arch, rng):
                                    rtol=2e-3, atol=2e-3, err_msg=f"{arch} t={t}")
 
 
+@pytest.mark.slow
 def test_parity_bf16_bounded(rng):
     """bf16 drift stays bounded (exactness is the f32 test's job)."""
     cfg = _prep("qwen3_32b", "bfloat16")
@@ -81,6 +83,7 @@ def test_parity_bf16_bounded(rng):
     assert max(errs) < 0.25, errs
 
 
+@pytest.mark.slow
 def test_ring_buffer_local_cache(rng):
     """gemma3 local slots keep a ring cache of width == sliding_window."""
     cfg = _prep("gemma3_12b", "float32")

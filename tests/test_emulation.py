@@ -84,6 +84,7 @@ def test_emulated_sim_fidelity():
     assert rep["mean_rel_err"] < 0.25
 
 
+@pytest.mark.slow
 def test_emulation_scales_to_1000_workers():
     store = ConfigStore()
     store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,

@@ -19,6 +19,7 @@ def _tol(dt):
         else dict(rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("B,S,H,KV,hd,causal,window", [
     (2, 256, 4, 2, 64, True, 0),
@@ -38,6 +39,7 @@ def test_flash_attention_sweep(B, S, H, KV, hd, causal, window, dtype, rng):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("B,W,H,KV,hd,ring", [
     (2, 256, 8, 2, 64, False),
@@ -56,6 +58,7 @@ def test_decode_attention_sweep(B, W, H, KV, hd, ring, dtype, rng):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("B,S,DI,N,chunk,bd", [
     (2, 128, 64, 8, 32, 32),
@@ -78,6 +81,7 @@ def test_mamba_scan_sweep(B, S, DI, N, chunk, bd, dtype, rng):
                                np.asarray(ref, np.float32), **tol)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("T,D,F,E,bt", [
     (512, 128, 256, 4, 64),

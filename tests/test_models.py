@@ -21,6 +21,7 @@ def make_batch(cfg, rng, B=2, S=32):
     return b
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", assigned_archs())
 def test_smoke_forward_and_grads(arch, rng):
     cfg = reduced(get_config(arch))
@@ -38,6 +39,7 @@ def test_smoke_forward_and_grads(arch, rng):
     assert np.isfinite(gsum) and gsum > 0, arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3_32b", "jamba15_large", "falcon_mamba_7b"])
 def test_unroll_matches_scan(arch, rng):
     cfg = reduced(get_config(arch))

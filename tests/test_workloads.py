@@ -1,0 +1,235 @@
+"""Workload scenario subsystem: determinism, golden metrics, trace replay.
+
+Determinism-first harness: every arrival process must produce a
+byte-identical ``RequestResult`` stream when re-run with the same seed
+(ISSUE acceptance criterion), golden request counts pin the generator
+outputs, and rate-envelope checks make sure each shape actually has the
+statistical signature it claims (bursty is bursty, diurnal peaks peak).
+"""
+import math
+
+import pytest
+
+from repro.core.config_store import ConfigStore
+from repro.core.router import build_tree
+from repro.core.simulator import Simulator, SyntheticServiceModel, summarize
+from repro.core.types import FunctionConfig
+from repro.workloads import (ARRIVALS, BurstyArrivals, DiurnalArrivals,
+                             FunctionProfile, MixedWorkload, PoissonArrivals,
+                             SizeDist, TraceArrivals, build_scenario,
+                             get_arrival, iats_from_times,
+                             install_demo_configs, list_scenarios, read_trace,
+                             write_trace)
+
+TRACE_IATS = [0.05, 0.2, 0.01, 0.7, 0.013, 0.5]
+
+# one representative instance of every registered arrival process; the
+# registry test below guarantees this stays in sync with ARRIVALS.
+PROCESSES = {
+    "poisson": lambda: PoissonArrivals(120.0),
+    "bursty": lambda: BurstyArrivals(rate_on=800.0, rate_off=40.0,
+                                     mean_on_s=0.5, mean_off_s=2.0),
+    "diurnal": lambda: DiurnalArrivals(base_rate=120.0, amplitude=0.9,
+                                       period_s=4.0),
+    "trace": lambda: TraceArrivals(TRACE_IATS, loop=True),
+}
+
+
+def _store():
+    s = ConfigStore()
+    s.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                         cold_start_s=0.2))
+    return s
+
+
+def _run(workload, store=None):
+    sim = Simulator(build_tree(4, fanout=2), store or _store(),
+                    SyntheticServiceModel(seed=2), seed=7)
+    sim.load(workload)
+    return sim.run()
+
+
+# ------------------------------------------------------- determinism
+@pytest.mark.parametrize("kind", sorted(PROCESSES))
+def test_arrival_process_deterministic_results(kind):
+    """Same seed => byte-identical RequestResult stream, twice in a row."""
+    def once():
+        wl = MixedWorkload(PROCESSES[kind](),
+                           [FunctionProfile("fn", size=SizeDist.const(16))],
+                           duration_s=4.0, seed=11)
+        return _run(wl)
+    a, b = once(), once()
+    assert len(a) > 0
+    assert a == b
+    assert repr(a) == repr(b)          # byte-identical, rids included
+
+
+def test_mixed_workload_deterministic_results():
+    """The 5th shape — weighted multi-function mix — is deterministic too."""
+    def once():
+        wl = build_scenario("multi_tenant", duration_s=3.0, seed=5)
+        store = ConfigStore()
+        install_demo_configs(store, wl)
+        return _run(wl, store)
+    a, b = once(), once()
+    assert len(a) > 0
+    assert repr(a) == repr(b)
+
+
+def test_request_stream_byte_identical():
+    wl1 = build_scenario("flash_crowd", duration_s=6.0, seed=9)
+    wl2 = build_scenario("flash_crowd", duration_s=6.0, seed=9)
+    assert repr(wl1.generate()) == repr(wl2.generate())
+
+
+def test_different_seeds_differ():
+    a = build_scenario("steady", duration_s=2.0, seed=1).generate()
+    b = build_scenario("steady", duration_s=2.0, seed=2).generate()
+    assert [r.arrival_t for r in a] != [r.arrival_t for r in b]
+
+
+def test_rid_assignment_modes():
+    wl = build_scenario("steady", duration_s=1.0, seed=1)
+    rids = [r.rid for r in wl.generate()]
+    assert rids == list(range(len(rids)))          # deterministic base 0
+    off = build_scenario("steady", duration_s=1.0, seed=1, rid_base=1000)
+    assert [r.rid for r in off.generate()][0] == 1000
+    legacy = build_scenario("steady", duration_s=1.0, seed=1, rid_base=None)
+    r1 = legacy.generate()[0].rid                  # process-global counter
+    r2 = build_scenario("steady", duration_s=1.0, seed=1,
+                        rid_base=None).generate()[0].rid
+    assert r2 > r1
+
+
+def test_mix_rng_independent_of_arrivals():
+    """Adding a function to the mix must not perturb arrival times."""
+    one = MixedWorkload(PoissonArrivals(100.0),
+                        [FunctionProfile("a")], duration_s=3.0, seed=4)
+    two = MixedWorkload(PoissonArrivals(100.0),
+                        [FunctionProfile("a"), FunctionProfile("b")],
+                        duration_s=3.0, seed=4)
+    assert ([r.arrival_t for r in one.generate()]
+            == [r.arrival_t for r in two.generate()])
+
+
+# ---------------------------------------------------- golden metrics
+def test_golden_request_counts():
+    """Pin the exact per-scenario request counts for a fixed seed; any
+    change to the generators' RNG consumption shows up here first."""
+    counts = {name: len(build_scenario(name, duration_s=5.0, seed=3)
+                        .generate())
+              for name in ("steady", "flash_crowd", "daily_cycle",
+                           "multi_tenant")}
+    assert counts == {"steady": 1009, "flash_crowd": 306,
+                      "daily_cycle": 922, "multi_tenant": 1523}
+
+
+def test_poisson_rate_envelope():
+    times = [r.arrival_t
+             for r in MixedWorkload(PoissonArrivals(200.0),
+                                    [FunctionProfile("fn")],
+                                    duration_s=20.0, seed=2).generate()]
+    n = len(times)
+    assert abs(n - 200 * 20) < 4 * math.sqrt(200 * 20)   # ~4 sigma
+    iats = iats_from_times(times)
+    mean = sum(iats) / n
+    cv = (sum((x - mean) ** 2 for x in iats) / n) ** 0.5 / mean
+    assert 0.8 < cv < 1.2                                # memoryless
+
+
+def test_bursty_is_burstier_than_poisson():
+    proc = BurstyArrivals(rate_on=2000.0, rate_off=10.0,
+                          mean_on_s=0.3, mean_off_s=5.0)
+    wl = MixedWorkload(proc, [FunctionProfile("fn")],
+                       duration_s=60.0, seed=2)
+    iats = iats_from_times([r.arrival_t for r in wl.generate()])
+    mean = sum(iats) / len(iats)
+    cv = (sum((x - mean) ** 2 for x in iats) / len(iats)) ** 0.5 / mean
+    assert cv > 1.5, "MMPP on/off must be over-dispersed vs Poisson"
+    n = len(iats)
+    expect = proc.mean_rate() * 30.0
+    assert 0.3 * expect < n < 3.0 * expect
+
+
+def test_diurnal_peak_vs_trough():
+    """Default phase peaks at t=P/4 and troughs at t=3P/4."""
+    period = 40.0
+    wl = MixedWorkload(DiurnalArrivals(base_rate=150.0, amplitude=0.9,
+                                       period_s=period),
+                       [FunctionProfile("fn")], duration_s=period, seed=2)
+    times = [r.arrival_t for r in wl.generate()]
+    peak = sum(1 for t in times if period * 0.125 <= t < period * 0.375)
+    trough = sum(1 for t in times if period * 0.625 <= t < period * 0.875)
+    assert peak > 3 * trough, (peak, trough)
+
+
+def test_mixed_workload_weights_and_sizes():
+    wl = build_scenario("multi_tenant", rps=400.0, duration_s=20.0, seed=6)
+    reqs = wl.generate()
+    share = {fn: sum(r.fn == fn for r in reqs) / len(reqs)
+             for fn in ("chat", "embed", "batch")}
+    assert abs(share["chat"] - 0.6) < 0.05
+    assert abs(share["embed"] - 0.3) < 0.05
+    assert abs(share["batch"] - 0.1) < 0.05
+    assert {r.size for r in reqs if r.fn == "batch"} <= {256, 512, 1024}
+    assert all(8 <= r.size <= 64 for r in reqs if r.fn == "embed")
+    assert all(r.size >= 1 for r in reqs)
+
+
+# ------------------------------------------------------ trace replay
+def test_trace_round_trip(tmp_path):
+    """write IAT file -> TraceArrivals replays it exactly (bit-exact)."""
+    path = str(tmp_path / "trace.iat")
+    write_trace(path, TRACE_IATS)
+    assert read_trace(path) == TRACE_IATS
+    wl = build_scenario("trace_replay", path=path)
+    times = [r.arrival_t for r in wl.generate()]
+    expect, t = [], 0.0
+    for iat in TRACE_IATS:
+        t += iat
+        expect.append(t)
+    assert times == expect
+    assert iats_from_times(times) == pytest.approx(TRACE_IATS, abs=1e-12)
+
+
+def test_trace_comments_and_looping(tmp_path):
+    path = str(tmp_path / "trace.iat")
+    with open(path, "w") as fh:
+        fh.write("# azure-style IAT trace\n0.5\n\n1.0  # tail comment\n")
+    assert read_trace(path) == [0.5, 1.0]
+    wl = build_scenario("trace_replay", path=path, loop=True,
+                        duration_s=6.0)
+    times = [r.arrival_t for r in wl.generate()]
+    assert times == [0.5, 1.5, 2.0, 3.0, 3.5, 4.5, 5.0]
+
+
+def test_trace_replay_through_simulator(tmp_path):
+    path = str(tmp_path / "trace.iat")
+    write_trace(path, [0.01] * 50)
+    res = _run(build_scenario("trace_replay", path=path))
+    assert len(res) == 50
+    assert summarize(res)["fail_rate"] == 0.0
+
+
+# --------------------------------------------------------- registry
+def test_registries_complete():
+    assert sorted(ARRIVALS) == ["bursty", "diurnal", "poisson", "trace"]
+    assert sorted(PROCESSES) == sorted(ARRIVALS)
+    assert set(list_scenarios()) >= {"steady", "flash_crowd", "daily_cycle",
+                                     "multi_tenant", "trace_replay"}
+    proc = get_arrival("poisson", rate=5.0)
+    assert isinstance(proc, PoissonArrivals) and proc.rate == 5.0
+    with pytest.raises(KeyError):
+        get_arrival("nope")
+    with pytest.raises(KeyError):
+        build_scenario("nope")
+
+
+def test_install_demo_configs_preserves_existing():
+    store = ConfigStore()
+    store.put(FunctionConfig(name="chat", arch="small_lm", concurrency=2))
+    wl = build_scenario("multi_tenant", duration_s=1.0)
+    install_demo_configs(store, wl)
+    assert store.get("chat").arch == "small_lm"      # not overwritten
+    assert store.get("chat").concurrency == 2
+    assert set(store.list()) == {"chat", "embed", "batch"}
