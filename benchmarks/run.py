@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_serving_engine     real-model worker throughput (Fig.2 step 1 rig)
   bench_kernels            Pallas kernel microbench (interpret) vs oracle
   bench_workload_scenarios named traffic shapes + >=1M-request bursty probe
+  bench_autoscaler_scenarios autoscaler policy menu vs static replicate
   bench_sim_throughput     simulator events/s (testbed capacity)
   roofline_table           dry-run artifacts summary (if sweep has run)
 """
@@ -240,6 +241,53 @@ def bench_workload_scenarios():
          f"p99_ms={s['p99']*1e3:.1f};fail={s['fail_rate']:.4f}")
 
 
+def bench_autoscaler_scenarios():
+    """Autoscaler policy menu vs the paper's static replicate recipe under
+    `flash_crowd` and `daily_cycle` (repro.autoscale). Reports p95,
+    fail/cold rates, and worker-seconds (the replica-seconds cost proxy:
+    branches are uniform, so the two are proportional)."""
+    from repro.autoscale import Autoscaler, build_pool
+    from repro.core.config_store import ConfigStore
+    from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                      summarize)
+    from repro.workloads import build_scenario, install_demo_configs
+    shapes = {
+        "flash_crowd": dict(duration_s=30.0, seed=3, base_rps=12.0,
+                            burst_rps=1000.0, mean_burst_s=2.0,
+                            mean_calm_s=10.0),
+        "daily_cycle": dict(duration_s=60.0, seed=3, mean_rps=150.0,
+                            period_s=60.0),
+    }
+    for shape, overrides in shapes.items():
+        for policy in ("static", "reactive", "target_concurrency",
+                       "predictive"):
+            wl = build_scenario(shape, **overrides)
+            store = ConfigStore()
+            install_demo_configs(store, wl)
+            # static = provisioned once at 3 branches (replicate recipe);
+            # scalers start at 1 branch and may grow to 8
+            branches = 3 if policy == "static" else 1
+            sim = Simulator(build_pool(branches, 2), store,
+                            SyntheticServiceModel(seed=2), seed=7,
+                            worker_capacity_slots=1)
+            scaler = Autoscaler(policy, interval_s=0.25, window_s=2.0,
+                                min_replicas=1, max_replicas=8,
+                                workers_per_replica=2, cooldown_s=2.0)
+            sim.attach_autoscaler(scaler)
+            n = sim.load(wl)
+            t0 = time.perf_counter()
+            s = summarize(sim.run())
+            wall = time.perf_counter() - t0
+            sm = scaler.summary()
+            _row(f"autoscale_{shape}_{policy}", 1e6 * s["p95"],
+                 f"n={n};p95_ms={s['p95']*1e3:.1f};"
+                 f"fail={s['fail_rate']:.4f};cold={s['cold_rate']:.3f};"
+                 f"worker_s={sm['worker_seconds']:.0f};"
+                 f"max_replicas={sm['max_replicas_seen']};"
+                 f"ups={sm['scale_ups']};downs={sm['scale_downs']};"
+                 f"sim_wall_s={wall:.1f}")
+
+
 def bench_sim_throughput():
     from repro.core.config_store import ConfigStore
     from repro.core.router import build_tree
@@ -282,7 +330,8 @@ def roofline_table():
 
 BENCHES = [bench_tree_scaling, bench_lb_policies, bench_concurrency,
            bench_emulation, bench_serving_engine, bench_kernels,
-           bench_workload_scenarios, bench_sim_throughput, roofline_table]
+           bench_workload_scenarios, bench_autoscaler_scenarios,
+           bench_sim_throughput, roofline_table]
 
 
 def main() -> None:

@@ -1,0 +1,71 @@
+"""Autoscale study: the full policy x scenario matrix, with the paper's
+static replicate recipe as the cost/latency baseline.
+
+For each traffic shape the study runs every registered autoscaler policy
+(static no-op, reactive thresholds, Knative-style target-concurrency with
+panic window, predictive Holt forecast) and reports the elasticity
+tradeoff: tail latency vs worker-seconds (the replica-seconds cost
+proxy). It ends with a scaling-decision log excerpt — byte-identical
+across same-seed runs, which is what `tests/test_autoscale.py` pins.
+
+Run:  PYTHONPATH=src python examples/autoscale_study.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.autoscale import Autoscaler, build_pool, list_autoscalers
+from repro.core.config_store import ConfigStore
+from repro.core.simulator import Simulator, SyntheticServiceModel, summarize
+from repro.workloads import build_scenario, install_demo_configs
+
+SHAPES = {
+    "flash_crowd": dict(duration_s=30.0, seed=3, base_rps=12.0,
+                        burst_rps=1000.0, mean_burst_s=2.0, mean_calm_s=10.0),
+    "daily_cycle": dict(duration_s=60.0, seed=3, mean_rps=150.0,
+                        period_s=60.0),
+    "steady": dict(duration_s=30.0, seed=3, rps=120.0),
+}
+
+
+def run_cell(shape: str, policy: str):
+    wl = build_scenario(shape, **SHAPES[shape])
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    branches = 3 if policy == "static" else 1    # replicate-recipe baseline
+    sim = Simulator(build_pool(branches, 2), store,
+                    SyntheticServiceModel(seed=2), seed=7,
+                    worker_capacity_slots=1)
+    scaler = Autoscaler(policy, interval_s=0.25, window_s=2.0,
+                        min_replicas=1, max_replicas=8,
+                        workers_per_replica=2, cooldown_s=2.0)
+    sim.attach_autoscaler(scaler)
+    sim.load(wl)
+    s = summarize(sim.run())
+    sm = scaler.summary()
+    print(f"  {policy:>20s}: p95={s['p95']*1e3:7.1f}ms "
+          f"fail={s['fail_rate']:.4f} cold={s['cold_rate']:.3f} "
+          f"worker_s={sm['worker_seconds']:6.0f} "
+          f"max_repl={sm['max_replicas_seen']} "
+          f"ups={sm['scale_ups']:2d} downs={sm['scale_downs']:2d}")
+    return scaler
+
+
+def main():
+    print(f"registered policies: {', '.join(list_autoscalers())}")
+    excerpt = None
+    for shape in SHAPES:
+        print(f"\n=== {shape} ===")
+        for policy in list_autoscalers():
+            scaler = run_cell(shape, policy)
+            if shape == "flash_crowd" and policy == "reactive":
+                excerpt = scaler
+    print("\nscaling-decision log excerpt (flash_crowd / reactive, "
+          "byte-identical for the same seed):")
+    lines = excerpt.decision_log().splitlines()
+    interesting = [l for l in lines if "action=hold" not in l]
+    for line in interesting[:10]:
+        print(" ", line)
+
+
+if __name__ == "__main__":
+    main()

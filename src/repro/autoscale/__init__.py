@@ -1,0 +1,21 @@
+"""Autoscaler control-loop subsystem: policy registry + controller.
+
+Turns the paper's static ``replicate()`` recipe into a live control loop
+driven by the workload-scenario subsystem. See README.md §"Autoscaling"
+for the extension guide."""
+from repro.autoscale.controller import (Autoscaler, ScalingDecision,
+                                        build_pool)
+from repro.autoscale.metrics import MetricsSample, MetricsWindow
+from repro.autoscale.policy import (AUTOSCALERS, AutoscalePolicy,
+                                    PredictivePolicy, ReactivePolicy,
+                                    StaticPolicy, TargetConcurrencyPolicy,
+                                    get_autoscaler, list_autoscalers,
+                                    register_autoscaler)
+
+__all__ = [
+    "Autoscaler", "ScalingDecision", "build_pool",
+    "MetricsSample", "MetricsWindow",
+    "AUTOSCALERS", "AutoscalePolicy", "StaticPolicy", "ReactivePolicy",
+    "TargetConcurrencyPolicy", "PredictivePolicy",
+    "get_autoscaler", "list_autoscalers", "register_autoscaler",
+]

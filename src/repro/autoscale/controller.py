@@ -1,0 +1,198 @@
+"""The autoscaler control loop: observe -> decide -> act, once per tick.
+
+The :class:`Autoscaler` binds to a :class:`~repro.core.simulator.Simulator`
+(``sim.attach_autoscaler``) which then fires a periodic ``autoscale_tick``
+event. Each tick the controller:
+
+1. snapshots live workers into the sliding :class:`MetricsWindow`
+   (queue depth, inflight, arrival/cold-start deltas),
+2. asks its policy for a desired replica count,
+3. clamps to ``[min_replicas, max_replicas]``, applies scale-down
+   cooldown, and acts through ``sim.add_branch`` / ``sim.remove_branch``
+   (which drains safely), prewarming instances on scaled-up workers,
+4. appends a :class:`ScalingDecision` to the decision log.
+
+Everything is a deterministic function of simulator state, so the same
+seed yields a byte-identical ``decision_log()`` — the regression contract
+``tests/test_autoscale.py`` pins.
+
+A replica is one LB branch of ``workers_per_replica`` workers directly
+under the tree root — the same unit as the paper's ``replicate()`` recipe,
+applied live. The controller only ever removes branches it added itself,
+so a pre-built static pool is never scaled below its deploy size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from repro.autoscale.metrics import MetricsSample, MetricsWindow
+from repro.autoscale.policy import AutoscalePolicy, get_autoscaler
+from repro.core.router import LBNode, build_leaf
+
+
+def build_pool(branches: int, workers_per_branch: int, *,
+               leaf_policy: str = "least_loaded",
+               inner_policy: str = "random",
+               prefix: str = "pool") -> LBNode:
+    """Root LB over ``branches`` identical leaf branches — the autoscaler's
+    (and the replicate recipe's) unit of scale, built explicitly."""
+    leaves = [build_leaf(f"{prefix}-b{i}",
+                         [f"{prefix}-b{i}-w{j}"
+                          for j in range(workers_per_branch)],
+                         leaf_policy)
+              for i in range(branches)]
+    return LBNode(f"{prefix}-root", inner_policy, children=leaves)
+
+
+@dataclass(frozen=True)
+class ScalingDecision:
+    """One control-loop outcome; ``fmt()`` is the byte-stable log line."""
+
+    t: float
+    policy: str
+    replicas_before: int
+    desired: int                # raw policy output, pre-clamp
+    applied: int                # replicas after this tick
+    action: str                 # hold | up | down | cooldown | bound | floor
+    queue: int
+    inflight: int
+    workers: int
+    arrival_rate: float
+
+    def fmt(self) -> str:
+        return (f"t={self.t:.3f} policy={self.policy} "
+                f"replicas={self.replicas_before}->{self.applied} "
+                f"desired={self.desired} action={self.action} "
+                f"queue={self.queue} inflight={self.inflight} "
+                f"workers={self.workers} arr_rate={self.arrival_rate:.3f}")
+
+
+class Autoscaler:
+    def __init__(self, policy, *, interval_s: float = 0.5,
+                 window_s: float = 4.0, min_replicas: int = 1,
+                 max_replicas: int = 8, workers_per_replica: int = 2,
+                 cooldown_s: float = 5.0, leaf_policy: str = "least_loaded",
+                 prewarm_fns: Optional[Sequence[str]] = ("auto",)):
+        """``policy`` is an :class:`AutoscalePolicy` or a registry name.
+        ``prewarm_fns``: function names to pre-start one instance of on
+        every scaled-up worker; ``("auto",)`` prewarms every registered
+        function, ``None`` disables prewarming."""
+        self.policy: AutoscalePolicy = (get_autoscaler(policy)
+                                        if isinstance(policy, str) else policy)
+        self.interval_s = interval_s
+        self.window = MetricsWindow(max(1, round(window_s / interval_s)))
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.workers_per_replica = workers_per_replica
+        self.cooldown_s = cooldown_s
+        self.leaf_policy = leaf_policy
+        self.prewarm_fns = prewarm_fns
+        self.decisions: List[ScalingDecision] = []
+        self.worker_seconds = 0.0       # cost proxy: live workers x time
+        self.replica_seconds = 0.0
+        self._scaled: List[str] = []    # LIFO of branches this loop added
+        self._branch_seq = 0
+        self._last_scale_t = -1e30
+        self._last_tick_t: Optional[float] = None
+        self._last_arrivals = 0
+        self._last_results = 0
+        self._last_cold = 0
+        # predictive needs the tick period to convert deltas to rates
+        if hasattr(self.policy, "interval_s"):
+            self.policy.interval_s = interval_s
+
+    # --------------------------------------------------------- observation
+    def _snapshot(self, sim) -> MetricsSample:
+        workers = [sim.workers[w] for w in sim._worker_list
+                   if w in sim.workers]
+        cold = sim.cold_starts_total
+        sample = MetricsSample(
+            t=sim.now,
+            replicas=len(sim.tree.children),
+            workers=len(workers),
+            queue=sum(len(w.queue) for w in workers),
+            inflight=sum(w.inflight() for w in workers),
+            arrivals=sim.arrivals_seen - self._last_arrivals,
+            completions=len(sim.results) - self._last_results,
+            cold_starts=cold - self._last_cold)
+        self._last_arrivals = sim.arrivals_seen
+        self._last_results = len(sim.results)
+        self._last_cold = cold
+        return sample
+
+    # --------------------------------------------------------------- tick
+    def on_tick(self, sim) -> ScalingDecision:
+        if self._last_tick_t is not None:
+            dt = sim.now - self._last_tick_t
+            self.worker_seconds += len(sim._worker_list) * dt
+            self.replica_seconds += len(sim.tree.children) * dt
+        self._last_tick_t = sim.now
+
+        sample = self._snapshot(sim)
+        self.window.push(sample)
+        current = sample.replicas
+        desired = self.policy.desired_replicas(self.window, current)
+        target = max(self.min_replicas, min(self.max_replicas, desired))
+
+        action = "hold"
+        if target > current:
+            action = "up"
+            for _ in range(target - current):
+                self._grow(sim)
+        elif target < current:
+            if sim.now - self._last_scale_t < self.cooldown_s:
+                action, target = "cooldown", current
+            elif not self._scaled:
+                action, target = "floor", current   # only shrink own branches
+            else:
+                action = "down"
+                shrink = min(current - target, len(self._scaled))
+                for _ in range(shrink):
+                    sim.remove_branch(self._scaled.pop())
+                target = current - shrink
+        elif desired != target:
+            action = "bound"
+        if action in ("up", "down"):
+            self._last_scale_t = sim.now
+
+        decision = ScalingDecision(
+            t=sim.now, policy=self.policy.name, replicas_before=current,
+            desired=desired, applied=len(sim.tree.children), action=action,
+            queue=sample.queue, inflight=sample.inflight,
+            workers=sample.workers,
+            arrival_rate=sample.arrivals / self.interval_s)
+        self.decisions.append(decision)
+        return decision
+
+    def _grow(self, sim) -> None:
+        bid = self._branch_seq
+        self._branch_seq += 1
+        name = f"as-b{bid}"
+        leaf = build_leaf(name, [f"{name}-w{j}"
+                                 for j in range(self.workers_per_replica)],
+                          self.leaf_policy)
+        sim.add_branch(leaf)
+        self._scaled.append(name)
+        if self.prewarm_fns is None:
+            return
+        fns = (sim.store.list() if "auto" in self.prewarm_fns
+               else self.prewarm_fns)
+        for w in leaf.workers:
+            for fn in fns:
+                sim.prewarm(w, fn)
+
+    # ------------------------------------------------------------ reporting
+    def decision_log(self) -> str:
+        """Byte-stable scaling-decision log (same seed => identical)."""
+        return "\n".join(d.fmt() for d in self.decisions)
+
+    def summary(self) -> dict:
+        ups = sum(d.action == "up" for d in self.decisions)
+        downs = sum(d.action == "down" for d in self.decisions)
+        return {"policy": self.policy.name, "ticks": len(self.decisions),
+                "scale_ups": ups, "scale_downs": downs,
+                "worker_seconds": self.worker_seconds,
+                "replica_seconds": self.replica_seconds,
+                "max_replicas_seen": max(
+                    (d.applied for d in self.decisions), default=0)}

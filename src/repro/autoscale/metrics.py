@@ -1,0 +1,66 @@
+"""Sliding metrics window the autoscaler control loop observes.
+
+Each ``autoscale_tick`` the controller snapshots the simulator into a
+:class:`MetricsSample` (totals over live workers plus deltas since the
+previous tick) and pushes it into a bounded :class:`MetricsWindow`.
+Policies only ever read aggregates of this window — they never touch the
+simulator directly — which keeps every policy a pure function of
+deterministic inputs and makes the scaling-decision log byte-identical
+across same-seed runs.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Optional
+
+
+@dataclass(frozen=True)
+class MetricsSample:
+    """One control-loop observation (totals at tick time + inter-tick deltas)."""
+
+    t: float
+    replicas: int              # branches under the LB root
+    workers: int               # live (routable) workers
+    queue: int                 # queued requests across workers
+    inflight: int              # busy instance slots across workers
+    arrivals: int              # requests arrived since the previous tick
+    completions: int           # results recorded since the previous tick
+    cold_starts: int           # instances cold-started since the previous tick
+
+    @property
+    def concurrency(self) -> int:
+        """Outstanding work (Knative's 'observed concurrency')."""
+        return self.queue + self.inflight
+
+    @property
+    def load_per_worker(self) -> float:
+        return self.concurrency / max(self.workers, 1)
+
+
+class MetricsWindow:
+    """Bounded deque of samples with the aggregates policies consume."""
+
+    def __init__(self, maxlen: int):
+        self.samples: Deque[MetricsSample] = deque(maxlen=max(1, maxlen))
+
+    def push(self, sample: MetricsSample) -> None:
+        self.samples.append(sample)
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+    def last(self) -> Optional[MetricsSample]:
+        return self.samples[-1] if self.samples else None
+
+    def avg(self, attr: str, tail: Optional[int] = None) -> float:
+        """Mean of a sample attribute over the window (or its last ``tail``
+        samples — the panic-window read)."""
+        if not self.samples:
+            return 0.0
+        xs = list(self.samples)[-tail:] if tail else list(self.samples)
+        return sum(getattr(s, attr) for s in xs) / len(xs)
+
+    def arrival_rate(self, interval_s: float, tail: Optional[int] = None) -> float:
+        """Observed arrivals/s averaged over the window."""
+        return self.avg("arrivals", tail) / max(interval_s, 1e-9)

@@ -1,0 +1,168 @@
+"""Pluggable autoscaler policies (registry mirrors the LB-policy registry).
+
+A policy maps the observed :class:`~repro.autoscale.metrics.MetricsWindow`
+to a desired replica count (replica = one LB branch of
+``workers_per_replica`` workers). Policies are pure functions of the
+window plus their own explicitly-seeded state, so two same-seed simulator
+runs produce byte-identical decision streams.
+
+The menu spans the design space the FaaS literature actually compares:
+
+- ``static``             no-op; the paper's provision-for-X replicate recipe
+- ``reactive``           queue/utilization threshold scaler (AWS-style)
+- ``target_concurrency`` Knative KPA: stable window + panic window
+- ``predictive``         Holt linear-trend (EWMA level+trend) rate forecast,
+                         built for ``daily_cycle`` envelopes
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List
+
+from repro.autoscale.metrics import MetricsWindow
+
+AUTOSCALERS: Dict[str, Callable[..., "AutoscalePolicy"]] = {}
+
+
+def register_autoscaler(cls):
+    """Class decorator: add an AutoscalePolicy subclass to the registry."""
+    AUTOSCALERS[cls.name] = cls
+    return cls
+
+
+def get_autoscaler(name: str, **params) -> "AutoscalePolicy":
+    """Construct a registered policy by name: the config/CLI hook."""
+    if name not in AUTOSCALERS:
+        raise KeyError(f"autoscaler policy {name!r} not registered "
+                       f"(have: {sorted(AUTOSCALERS)})")
+    return AUTOSCALERS[name](**params)
+
+
+def list_autoscalers() -> List[str]:
+    return sorted(AUTOSCALERS)
+
+
+class AutoscalePolicy:
+    """Base interface: desired replica count given the metrics window."""
+
+    name = "base"
+
+    def desired_replicas(self, window: MetricsWindow, current: int) -> int:
+        raise NotImplementedError
+
+
+@register_autoscaler
+@dataclass
+class StaticPolicy(AutoscalePolicy):
+    """No-op baseline: whatever the tree was built with, it keeps.
+
+    This is the paper's scaling story so far — ``replicate(tree, k)`` at
+    deploy time — expressed as a policy so the benchmark cost/latency
+    accounting is identical across the whole menu.
+    """
+
+    name = "static"
+
+    def desired_replicas(self, window, current):
+        return current
+
+
+@register_autoscaler
+@dataclass
+class ReactivePolicy(AutoscalePolicy):
+    """Threshold scaler on outstanding work per worker.
+
+    Scale up proportionally (straight to the load-implied size, not +1
+    steps — flash crowds don't wait) when the *latest* sample exceeds
+    ``upper``; scale down toward the load-implied size only when the
+    *window average* falls below ``lower``, so one calm tick inside a
+    burst never sheds capacity.
+    """
+
+    target_load: float = 4.0     # design point: outstanding reqs per worker
+    upper: float = 6.0           # latest-sample load that triggers scale-up
+    lower: float = 1.0           # window-average load that allows scale-down
+    name = "reactive"
+
+    def desired_replicas(self, window, current):
+        last = window.last()
+        if last is None:
+            return current
+        if last.load_per_worker > self.upper:
+            return math.ceil(current * last.load_per_worker / self.target_load)
+        if window.avg("load_per_worker") < self.lower:
+            down = math.ceil(
+                current * window.avg("load_per_worker") / self.target_load)
+            return min(current, max(1, down))
+        return current
+
+
+@register_autoscaler
+@dataclass
+class TargetConcurrencyPolicy(AutoscalePolicy):
+    """Knative-KPA-style scaler: size the fleet so observed concurrency
+    per worker sits at ``target``; a short panic window overrides the
+    stable window when concurrency doubles, and freezes scale-down while
+    panicking."""
+
+    target: float = 4.0          # concurrent requests per worker at SLO
+    panic_window: int = 2        # samples in the panic (burst) window
+    panic_threshold: float = 2.0  # panic when panic-desired >= thr * current
+    panic_hold_ticks: int = 8    # ticks scale-down stays frozen after panic
+    _panic_left: int = field(default=0, repr=False)
+    name = "target_concurrency"
+
+    def _size(self, concurrency: float, workers_per_replica: float) -> int:
+        return math.ceil(concurrency / (self.target * workers_per_replica))
+
+    def desired_replicas(self, window, current):
+        last = window.last()
+        if last is None:
+            return current
+        wpr = last.workers / max(last.replicas, 1)
+        stable = self._size(window.avg("concurrency"), wpr)
+        panic = self._size(window.avg("concurrency", self.panic_window), wpr)
+        if panic >= self.panic_threshold * current:
+            self._panic_left = self.panic_hold_ticks
+            return max(current, panic)
+        if self._panic_left > 0:
+            self._panic_left -= 1
+            return max(current, stable)     # panicking: never scale down
+        return max(1, stable)
+
+
+@register_autoscaler
+@dataclass
+class PredictivePolicy(AutoscalePolicy):
+    """Holt linear-trend forecast of the arrival rate (EWMA on level and
+    trend), sized against a per-worker service rate. Scales *ahead* of a
+    ``daily_cycle`` ramp instead of chasing it; falls back to reactive
+    sizing whenever observed load already exceeds the forecast."""
+
+    rate_per_worker: float = 120.0   # sustainable requests/s per worker
+    alpha: float = 0.5               # level smoothing
+    beta: float = 0.3                # trend smoothing
+    lead_ticks: float = 4.0          # forecast horizon, in ticks
+    interval_s: float = 1.0          # set by the controller on attach
+    _level: float = field(default=-1.0, repr=False)
+    _trend: float = field(default=0.0, repr=False)
+    name = "predictive"
+
+    def desired_replicas(self, window, current):
+        last = window.last()
+        if last is None:
+            return current
+        rate = last.arrivals / max(self.interval_s, 1e-9)
+        if self._level < 0.0:                       # first observation
+            self._level = rate
+        prev = self._level
+        self._level = self.alpha * rate + (1 - self.alpha) * (prev + self._trend)
+        self._trend = (self.beta * (self._level - prev)
+                       + (1 - self.beta) * self._trend)
+        forecast = max(0.0, self._level + self._trend * self.lead_ticks)
+        wpr = last.workers / max(last.replicas, 1)
+        need = math.ceil(forecast / (self.rate_per_worker * wpr))
+        # never size below what the backlog already demands right now
+        backlog = math.ceil(last.concurrency / (4.0 * wpr))
+        return max(1, need, backlog)

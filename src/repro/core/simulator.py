@@ -108,18 +108,25 @@ class Simulator:
             w: _Worker(w, capacity_slots=worker_capacity_slots)
             for w in tree.all_workers()}
         self._worker_list = list(self.workers)   # cache (rebuilt on add/remove)
+        self._draining: Dict[str, _Worker] = {}  # removed, in-flight finishing
         self._events: list = []
+        self._pending_real = 0       # events besides autoscale_tick in queue
         self._seq = itertools.count()
         self._iid = itertools.count()
         self.now = 0.0
         self.events_processed = 0
+        self.arrivals_seen = 0
+        self.cold_starts_total = 0   # survives worker removal (scale-down)
         self.results: List[RequestResult] = []
         self.telemetry: List[TelemetryRecord] = []
         self._finished: set = set()
         self._fn_cost: Dict[str, float] = {}
+        self.autoscaler = None
 
     # ----------------------------------------------------------- event API
     def _push(self, t: float, kind: str, payload):
+        if kind != "autoscale_tick":
+            self._pending_real += 1
         heapq.heappush(self._events, (t, next(self._seq), kind, payload))
 
     def submit(self, req: Request):
@@ -140,8 +147,56 @@ class Simulator:
         self._worker_list = list(self.workers)
 
     def remove_branch(self, name: str):
+        """Remove a branch *safely*: queued requests on its workers are
+        re-routed through the shrunk tree, in-flight ones drain to
+        completion on a parked worker, and the stale ``self.workers``
+        entries are dropped so a later ``add_branch`` cannot resurrect
+        routing to dead names (the seed left both dangling)."""
+        removed = [c for c in self.tree.children if c.name == name]
         self.tree.remove_branch(name)
         self._worker_list = self.tree.all_workers()
+        live = set(self._worker_list)
+        for node in removed:
+            for wname in node.all_workers():
+                if wname in live:           # still reachable via another branch
+                    continue
+                w = self.workers.pop(wname, None)
+                if w is None:
+                    continue
+                for req in w.queue:         # re-route queued work
+                    self._push(self.now, "reroute", req)
+                w.queue.clear()
+                if w.inflight() > 0:
+                    self._draining[wname] = w
+
+    def prewarm(self, worker: str, fn: str) -> bool:
+        """Proactively start (cold-start now, serve warm later) one
+        instance of ``fn`` on a worker — the autoscaler's scale-up
+        companion. Returns False if the worker is gone/unhealthy or at
+        instance capacity."""
+        w = self.workers.get(worker)
+        if w is None or not w.healthy:
+            return False
+        cfg = self.store.get(fn)
+        inst = self._maybe_start_instance(w, cfg)
+        if inst is None:
+            return False
+        # instances normally get idle_checks from _on_finish; a prewarmed
+        # instance that never serves traffic needs its own reap path or it
+        # would pin a capacity slot forever
+        self._push(inst.ready_t + cfg.idle_timeout_s, "idle_check",
+                   (worker, inst.iid))
+        return True
+
+    def attach_autoscaler(self, scaler, *, first_tick_s: float = None):
+        """Bind an ``repro.autoscale.Autoscaler`` and schedule its periodic
+        ``autoscale_tick`` control-loop event. Ticks re-arm themselves only
+        while other events remain, so ``run()`` still terminates."""
+        self.autoscaler = scaler
+        t0 = self.now + (scaler.interval_s if first_tick_s is None
+                         else first_tick_s)
+        self._push(t0, "autoscale_tick", None)
+        return scaler
 
     def fn_cost(self, fn: str) -> float:
         if fn not in self._fn_cost:
@@ -166,6 +221,8 @@ class Simulator:
                 # re-queue so a later run() resumes without losing the event
                 heapq.heappush(self._events, (t, seq, kind, payload))
                 break
+            if kind != "autoscale_tick":
+                self._pending_real -= 1
             self.now = t
             self.events_processed += 1
             getattr(self, f"_on_{kind}")(payload)
@@ -178,7 +235,16 @@ class Simulator:
             capacity=w.slots_total(), warm_fns=w.warm_fns(),
             healthy=w.healthy), self.now)
 
+    def _on_autoscale_tick(self, _payload):
+        if self.autoscaler is None:
+            return
+        self.autoscaler.on_tick(self)
+        if self._pending_real > 0:      # re-arm only while real work remains
+            self._push(self.now + self.autoscaler.interval_s,
+                       "autoscale_tick", None)
+
     def _on_arrival(self, req: Request):
+        self.arrivals_seen += 1
         healthy = [w for w in self._worker_list
                    if self.workers[w].healthy]
         if not healthy:
@@ -201,12 +267,30 @@ class Simulator:
             self._push(self.now + self.hedge_after_s, "maybe_hedge", req)
 
     def _on_enqueue(self, req: Request):
-        w = self.workers[req._worker]
+        w = self.workers.get(req._worker)
+        if w is None:                   # branch removed mid-hop: re-route
+            self._on_reroute(req)
+            return
         if not w.healthy:
             self._record_fail(req, "worker died")
             return
         w.queue.append(req)
         self._dispatch(w)
+
+    def _on_reroute(self, req: Request):
+        """Send a displaced request (its worker's branch was removed)
+        through the shrunk tree. Unlike an arrival this reuses the
+        request's telemetry record and hedge timer — it is the same
+        request, not new offered load."""
+        healthy = [w for w in self._worker_list if self.workers[w].healthy]
+        if not healthy:
+            self._record_fail(req, "no healthy workers")
+            return
+        wid, hops = self.tree.route(req, self.view, self.rng, self.now)
+        if not self.workers[wid].healthy:          # stale routing: re-roll
+            wid = self.rng.choice(healthy)
+        req._worker = wid
+        self._push(self.now + self.hop_s * hops, "enqueue", req)
 
     def _on_maybe_hedge(self, req: Request):
         if req.rid in self._finished:
@@ -216,7 +300,10 @@ class Simulator:
         self._on_arrival(clone)
 
     def _on_fail(self, worker: str):
-        w = self.workers[worker]
+        w = self.workers.get(worker)
+        if w is None:                   # branch already scaled away
+            self._draining.pop(worker, None)
+            return
         w.healthy = False
         for req in w.queue:
             self._record_fail(req, "worker died")
@@ -225,8 +312,11 @@ class Simulator:
         self._refresh_view(w)
 
     def _on_recover(self, worker: str):
-        self.workers[worker].healthy = True
-        self._refresh_view(self.workers[worker])
+        w = self.workers.get(worker)
+        if w is None:
+            return
+        w.healthy = True
+        self._refresh_view(w)
 
     # ----------------------------------------------------- worker mechanics
     def _dispatch(self, w: _Worker):
@@ -241,10 +331,18 @@ class Simulator:
             warming_free[fn] = sum(
                 (i.slots if i.slots > 0 else 10 ** 9) - i.busy
                 for i in il if i.ready_t > self.now)
+        # free ready slots, warming slots, and instance-start headroom only
+        # shrink while this scan runs, so one fully-failed attempt proves
+        # every later same-fn attempt fails too: skip them in O(1) instead
+        # of rescanning instances (deep-backlog scans were quadratic)
+        saturated: set = set()
         for req in w.queue:
             cfg = self.store.get(req.fn)
             if self.now - req.arrival_t > cfg.timeout_s:
                 self._record_fail(req, "queue timeout")
+                continue
+            if cfg.name in saturated:
+                still.append(req)
                 continue
             inst = self._pick_instance(w, cfg)
             if inst is not None:
@@ -262,6 +360,8 @@ class Simulator:
                 warming_free[cfg.name] = warming_free.get(cfg.name, 0) \
                     + (inst.slots if inst.slots > 0 else 10 ** 9) - 1
                 self._poke(w, inst.ready_t)
+            else:
+                saturated.add(cfg.name)
             still.append(req)
         w.queue = still
         self._refresh_view(w)
@@ -273,7 +373,9 @@ class Simulator:
             self._push(t, "poke", w.name)
 
     def _on_poke(self, worker: str):
-        w = self.workers[worker]
+        w = self.workers.get(worker)
+        if w is None:
+            return
         w.poke_times.discard(round(self.now, 9))
         self._dispatch(w)
 
@@ -298,6 +400,7 @@ class Simulator:
         il.append(inst)
         w.cold_starts += 1
         w.instances_started += 1
+        self.cold_starts_total += 1
         return inst
 
     def _start_service(self, w: _Worker, inst: _Instance, req: Request, cfg):
@@ -322,14 +425,19 @@ class Simulator:
 
     def _on_finish(self, payload):
         req, wname, iid, cold, start_t, ok = payload
-        w = self.workers[wname]
-        for il in w.instances.values():
+        draining = wname not in self.workers
+        # a drained-and-retired (or failed-then-removed) worker may be gone
+        # entirely; the result below must still be recorded either way
+        w = self._draining.get(wname) if draining else self.workers[wname]
+        for il in (w.instances.values() if w is not None else ()):
             for inst in il:
                 if inst.iid == iid:
                     inst.busy -= 1
                     inst.last_used = self.now
                     self._push(self.now + self.store.get(req.fn).idle_timeout_s,
                                "idle_check", (wname, iid))
+        if draining and w is not None and w.inflight() == 0:
+            self._draining.pop(wname, None)   # retire even if hedge lost
         # rid 0 is falsy, so `or` would misattribute a hedge of request 0
         primary = req.hedged_from if req.hedged_from is not None else req.rid
         if primary in self._finished:
@@ -343,11 +451,15 @@ class Simulator:
         rec = self.telemetry[req._telemetry_idx]
         rec.latency = res.latency
         rec.ok = ok
+        if draining:                     # already retired above if empty
+            return
         self._dispatch(w)
 
     def _on_idle_check(self, payload):
         wname, iid = payload
-        w = self.workers[wname]
+        w = self.workers.get(wname)
+        if w is None:                   # branch scaled away meanwhile
+            return
         for fn, il in w.instances.items():
             for inst in list(il):
                 if (inst.iid == iid and inst.busy == 0 and
@@ -391,6 +503,11 @@ def summarize(results: List[RequestResult]) -> dict:
         return {"n": 0}
     lat = np.array([r.latency for r in results if r.ok])
     ok = sum(r.ok for r in results)
+    # throughput over the makespan, not absolute finish time: a run whose
+    # first arrival is at t0 > 0 (daily_cycle offsets, resumed run(until))
+    # must not have its rate diluted by the empty [0, t0) prefix
+    makespan = (max(r.finish_t for r in results)
+                - min(r.arrival_t for r in results))
     return {
         "n": len(results), "ok": ok, "fail_rate": 1 - ok / len(results),
         "cold_rate": sum(r.cold_start for r in results) / len(results),
@@ -398,5 +515,5 @@ def summarize(results: List[RequestResult]) -> dict:
         "p95": float(np.percentile(lat, 95)) if len(lat) else float("nan"),
         "p99": float(np.percentile(lat, 99)) if len(lat) else float("nan"),
         "mean": float(lat.mean()) if len(lat) else float("nan"),
-        "throughput": (ok / max(max(r.finish_t for r in results), 1e-9)),
+        "throughput": ok / max(makespan, 1e-9),
     }

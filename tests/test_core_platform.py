@@ -226,6 +226,24 @@ def test_idle_instances_reaped(store):
     assert all(r.cold_start for r in res), "second request must cold start again"
 
 
+def test_summarize_throughput_uses_makespan():
+    """Seed bug: throughput divided by max(finish_t), undercounting any
+    run whose first arrival is at t0 > 0 (daily_cycle offsets, resumed
+    run(until) segments)."""
+    from repro.core.types import RequestResult
+
+    def res(arrival, finish, ok=True):
+        return RequestResult(rid=0, fn="fn", ok=ok, arrival_t=arrival,
+                             start_t=arrival, finish_t=finish,
+                             cold_start=False, worker="w0", instance="i")
+    shifted = [res(100.0 + i, 100.5 + i) for i in range(10)]
+    s = summarize(shifted)
+    # 10 ok requests over a 9.5s makespan — NOT over 109.5s absolute time
+    assert s["throughput"] == pytest.approx(10 / 9.5)
+    assert summarize([res(0.0, 2.0), res(1.0, 3.0, ok=False)])[
+        "throughput"] == pytest.approx(1 / 3.0)
+
+
 # ------------------------------------------------------------ config store
 def test_config_store_versioning(store):
     assert store.version("fn") == 1

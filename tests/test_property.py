@@ -108,6 +108,64 @@ def test_moe_dispatch_conservation(seed, B, S, E, k):
     assert np.isfinite(np.asarray(y, np.float32)).all()
 
 
+# ------------------------------------------------------ LB-tree invariants
+TREE_POLICIES = ["random", "round_robin", "hash", "least_loaded", "pow2",
+                 "warm_affinity"]
+
+
+@given(st.integers(1, 48), st.integers(2, 8), st.sampled_from(TREE_POLICIES),
+       st.sampled_from(TREE_POLICIES), st.integers(0, 10**6))
+@settings(max_examples=80, deadline=None)
+def test_route_always_returns_known_worker(n, fanout, leaf_pol, inner_pol,
+                                           seed):
+    """route() must land on a member of all_workers() for any tree shape,
+    policy mix, and request stream."""
+    import random
+    from repro.core.router import StateView, build_tree
+    from repro.core.types import Request
+    tree = build_tree(n, fanout=fanout, leaf_policy=leaf_pol,
+                      inner_policy=inner_pol)
+    workers = set(tree.all_workers())
+    assert len(workers) == n
+    view, rng = StateView(), random.Random(seed)
+    for i in range(25):
+        w, hops = tree.route(Request(fn="fn", arrival_t=0.0, rid=i),
+                             view, rng, 0.0)
+        assert w in workers
+        assert hops >= 1
+
+
+@given(st.integers(1, 24), st.integers(2, 6), st.integers(1, 5))
+@settings(max_examples=60, deadline=None)
+def test_replicate_yields_k_times_unique_workers(n, fanout, k):
+    """replicate(tree, k) must hold exactly k*n workers, all unique ids."""
+    from repro.core.router import build_tree, replicate
+    tree = build_tree(n, fanout=fanout)
+    grown = replicate(tree, times=k) if k > 1 else tree
+    workers = grown.all_workers()
+    assert len(workers) == k * n
+    assert len(set(workers)) == k * n
+
+
+@given(st.integers(1, 24), st.integers(2, 6),
+       st.lists(st.integers(1, 4), min_size=1, max_size=4))
+@settings(max_examples=60, deadline=None)
+def test_add_remove_branch_round_trip_preserves_workers(n, fanout, sizes):
+    """Adding branches then removing them restores the exact worker set."""
+    from repro.core.router import build_leaf, build_tree
+    tree = build_tree(n, fanout=fanout)
+    before = sorted(tree.all_workers())
+    for i, size in enumerate(sizes):
+        tree.add_branch(build_leaf(
+            f"x-b{i}", [f"x-b{i}-w{j}" for j in range(size)]))
+    grown = sorted(tree.all_workers())
+    assert len(grown) == n + sum(sizes)
+    assert len(set(grown)) == len(grown)
+    for i in range(len(sizes)):
+        tree.remove_branch(f"x-b{i}")
+    assert sorted(tree.all_workers()) == before
+
+
 @given(st.integers(0, 1000))
 @settings(max_examples=30, deadline=None)
 def test_simulator_concurrency_never_exceeded(seed):
