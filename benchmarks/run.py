@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_sim_throughput     simulator events/s (testbed capacity)
   roofline_table           dry-run artifacts summary (if sweep has run)
 """
+import json
 import os
 import sys
 import time
@@ -21,9 +22,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+# every _row also lands here; main() dumps them to benchmarks/out/ as the
+# JSON artifact CI uploads (gitignored locally)
+ROWS = []
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
 
 def _row(name, us, derived=""):
     print(f"{name},{us:.2f},{derived}")
+    ROWS.append({"name": name, "us_per_call": round(us, 2),
+                 "derived": derived})
 
 
 def bench_tree_scaling():
@@ -245,8 +253,10 @@ def bench_autoscaler_scenarios():
     """Autoscaler policy menu vs the paper's static replicate recipe under
     `flash_crowd` and `daily_cycle` (repro.autoscale). Reports p95,
     fail/cold rates, and worker-seconds (the replica-seconds cost proxy:
-    branches are uniform, so the two are proportional)."""
-    from repro.autoscale import Autoscaler, build_pool
+    branches are uniform, so the two are proportional). ``slo_aware``
+    scales against the scenario's per-function `slo_p95_s` targets and
+    additionally reports per-function p95 vs SLO."""
+    from repro.autoscale import Autoscaler, build_pool, get_autoscaler
     from repro.core.config_store import ConfigStore
     from repro.core.simulator import (Simulator, SyntheticServiceModel,
                                       summarize)
@@ -260,7 +270,7 @@ def bench_autoscaler_scenarios():
     }
     for shape, overrides in shapes.items():
         for policy in ("static", "reactive", "target_concurrency",
-                       "predictive"):
+                       "predictive", "slo_aware"):
             wl = build_scenario(shape, **overrides)
             store = ConfigStore()
             install_demo_configs(store, wl)
@@ -270,22 +280,34 @@ def bench_autoscaler_scenarios():
             sim = Simulator(build_pool(branches, 2), store,
                             SyntheticServiceModel(seed=2), seed=7,
                             worker_capacity_slots=1)
-            scaler = Autoscaler(policy, interval_s=0.25, window_s=2.0,
+            pol = (get_autoscaler("slo_aware", slo_p95_s=wl.slo_targets())
+                   if policy == "slo_aware" else policy)
+            scaler = Autoscaler(pol, interval_s=0.25, window_s=2.0,
                                 min_replicas=1, max_replicas=8,
                                 workers_per_replica=2, cooldown_s=2.0)
             sim.attach_autoscaler(scaler)
             n = sim.load(wl)
             t0 = time.perf_counter()
-            s = summarize(sim.run())
+            results = sim.run()
+            s = summarize(results)
             wall = time.perf_counter() - t0
             sm = scaler.summary()
+            extra = ""
+            if policy == "slo_aware":
+                parts = []
+                for fn, slo in sorted(wl.slo_targets().items()):
+                    lat = np.array([r.latency for r in results
+                                    if r.ok and r.fn == fn])
+                    p95 = float(np.percentile(lat, 95)) if len(lat) else 0.0
+                    parts.append(f"{fn}={p95*1e3:.0f}/{slo*1e3:.0f}ms")
+                extra = ";fn_p95_vs_slo=" + ",".join(parts)
             _row(f"autoscale_{shape}_{policy}", 1e6 * s["p95"],
                  f"n={n};p95_ms={s['p95']*1e3:.1f};"
                  f"fail={s['fail_rate']:.4f};cold={s['cold_rate']:.3f};"
                  f"worker_s={sm['worker_seconds']:.0f};"
                  f"max_replicas={sm['max_replicas_seen']};"
                  f"ups={sm['scale_ups']};downs={sm['scale_downs']};"
-                 f"sim_wall_s={wall:.1f}")
+                 f"sim_wall_s={wall:.1f}{extra}")
 
 
 def bench_sim_throughput():
@@ -344,6 +366,10 @@ def main() -> None:
             b()
         except Exception as e:  # keep the harness robust
             _row(b.__name__ + "_ERROR", 0.0, repr(e)[:120])
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, f"results{'_' + only if only else ''}.json")
+    with open(out, "w") as fh:
+        json.dump({"filter": only, "rows": ROWS}, fh, indent=1)
 
 
 if __name__ == "__main__":

@@ -13,7 +13,8 @@ Run:  PYTHONPATH=src python examples/autoscale_study.py
 import sys
 sys.path.insert(0, "src")
 
-from repro.autoscale import Autoscaler, build_pool, list_autoscalers
+from repro.autoscale import (Autoscaler, build_pool, get_autoscaler,
+                             list_autoscalers)
 from repro.core.config_store import ConfigStore
 from repro.core.simulator import Simulator, SyntheticServiceModel, summarize
 from repro.workloads import build_scenario, install_demo_configs
@@ -35,7 +36,10 @@ def run_cell(shape: str, policy: str):
     sim = Simulator(build_pool(branches, 2), store,
                     SyntheticServiceModel(seed=2), seed=7,
                     worker_capacity_slots=1)
-    scaler = Autoscaler(policy, interval_s=0.25, window_s=2.0,
+    # slo_aware scales against the scenario's per-function SLO targets
+    pol = (get_autoscaler("slo_aware", slo_p95_s=wl.slo_targets())
+           if policy == "slo_aware" else policy)
+    scaler = Autoscaler(pol, interval_s=0.25, window_s=2.0,
                         min_replicas=1, max_replicas=8,
                         workers_per_replica=2, cooldown_s=2.0)
     sim.attach_autoscaler(scaler)

@@ -1,21 +1,27 @@
 """Autoscaler control-loop subsystem: policy registry + controller.
 
 Turns the paper's static ``replicate()`` recipe into a live control loop
-driven by the workload-scenario subsystem. See README.md §"Autoscaling"
-for the extension guide."""
+driven by the workload-scenario subsystem, with per-function metrics,
+SLO-aware scaling, per-function prewarm/reap, and decision-log replay.
+See README.md §"Autoscaling" for the extension guide."""
 from repro.autoscale.controller import (Autoscaler, ScalingDecision,
                                         build_pool)
-from repro.autoscale.metrics import MetricsSample, MetricsWindow
+from repro.autoscale.metrics import (FnSample, LatencyEstimator,
+                                     MetricsSample, MetricsWindow)
 from repro.autoscale.policy import (AUTOSCALERS, AutoscalePolicy,
                                     PredictivePolicy, ReactivePolicy,
-                                    StaticPolicy, TargetConcurrencyPolicy,
+                                    SloAwarePolicy, StaticPolicy,
+                                    TargetConcurrencyPolicy,
                                     get_autoscaler, list_autoscalers,
                                     register_autoscaler)
+from repro.autoscale.replay import (ReplayPolicy, load_decision_log,
+                                    replay, save_decision_log)
 
 __all__ = [
     "Autoscaler", "ScalingDecision", "build_pool",
-    "MetricsSample", "MetricsWindow",
+    "FnSample", "LatencyEstimator", "MetricsSample", "MetricsWindow",
     "AUTOSCALERS", "AutoscalePolicy", "StaticPolicy", "ReactivePolicy",
-    "TargetConcurrencyPolicy", "PredictivePolicy",
+    "TargetConcurrencyPolicy", "PredictivePolicy", "SloAwarePolicy",
     "get_autoscaler", "list_autoscalers", "register_autoscaler",
+    "ReplayPolicy", "replay", "save_decision_log", "load_decision_log",
 ]

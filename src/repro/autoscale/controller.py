@@ -23,10 +23,11 @@ so a pre-built static pool is never scaled below its deploy size.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.autoscale.metrics import MetricsSample, MetricsWindow
+from repro.autoscale.metrics import (FnSample, LatencyEstimator,
+                                     MetricsSample, MetricsWindow)
 from repro.autoscale.policy import AutoscalePolicy, get_autoscaler
 from repro.core.router import LBNode, build_leaf
 
@@ -47,7 +48,9 @@ def build_pool(branches: int, workers_per_branch: int, *,
 
 @dataclass(frozen=True)
 class ScalingDecision:
-    """One control-loop outcome; ``fmt()`` is the byte-stable log line."""
+    """One control-loop outcome; ``fmt()`` is the byte-stable log line and
+    ``to_record()`` the structured (JSON-able) form the replay tool
+    re-applies."""
 
     t: float
     policy: str
@@ -59,13 +62,30 @@ class ScalingDecision:
     inflight: int
     workers: int
     arrival_rate: float
+    # per-function prewarm(+)/reap(-) directives the policy emitted this
+    # tick, sorted by fn — the control plane below branch granularity
+    fn_deltas: Tuple[Tuple[str, int], ...] = ()
 
     def fmt(self) -> str:
+        acts = ",".join(f"{fn}:{n:+d}" for fn, n in self.fn_deltas) or "-"
         return (f"t={self.t:.3f} policy={self.policy} "
                 f"replicas={self.replicas_before}->{self.applied} "
                 f"desired={self.desired} action={self.action} "
                 f"queue={self.queue} inflight={self.inflight} "
-                f"workers={self.workers} arr_rate={self.arrival_rate:.3f}")
+                f"workers={self.workers} arr_rate={self.arrival_rate:.3f} "
+                f"fn_actions={acts}")
+
+    def to_record(self) -> dict:
+        """Structured form (plain JSON types) for logs and replay."""
+        rec = asdict(self)
+        rec["fn_deltas"] = [list(d) for d in self.fn_deltas]
+        return rec
+
+    @classmethod
+    def from_record(cls, rec: dict) -> "ScalingDecision":
+        rec = dict(rec)
+        rec["fn_deltas"] = tuple((fn, int(n)) for fn, n in rec["fn_deltas"])
+        return cls(**rec)
 
 
 class Autoscaler:
@@ -98,11 +118,40 @@ class Autoscaler:
         self._last_arrivals = 0
         self._last_results = 0
         self._last_cold = 0
-        # predictive needs the tick period to convert deltas to rates
+        self._last_fn_arrivals: Dict[str, int] = {}
+        self._lat_est = LatencyEstimator()
+        # rate-based policies need the tick period to convert deltas
         if hasattr(self.policy, "interval_s"):
             self.policy.interval_s = interval_s
 
     # --------------------------------------------------------- observation
+    def _fn_samples(self, sim, workers) -> Tuple[FnSample, ...]:
+        """Aggregate the per-function layer of every live worker and feed
+        the latency estimator from the results delta — O(workers x fns +
+        new results) per tick."""
+        new_completions: Dict[str, int] = {}
+        for r in sim.results[self._last_results:]:
+            new_completions[r.fn] = new_completions.get(r.fn, 0) + 1
+            if r.ok:
+                self._lat_est.observe(r.fn, r.latency)
+        rows = []
+        for fn in sorted(sim.arrivals_by_fn):
+            queue = inflight = warm = 0
+            for w in workers:
+                queue += w.queue.depth(fn)
+                rs = w.replica_sets.get(fn)
+                if rs is not None:
+                    inflight += rs.inflight()
+                    warm += len(rs)
+            arr = sim.arrivals_by_fn[fn]
+            rows.append(FnSample(
+                fn=fn, queue=queue, inflight=inflight,
+                arrivals=arr - self._last_fn_arrivals.get(fn, 0),
+                completions=new_completions.get(fn, 0), warm=warm,
+                p95_est=self._lat_est.p95(fn)))
+            self._last_fn_arrivals[fn] = arr
+        return tuple(rows)
+
     def _snapshot(self, sim) -> MetricsSample:
         workers = [sim.workers[w] for w in sim._worker_list
                    if w in sim.workers]
@@ -115,7 +164,8 @@ class Autoscaler:
             inflight=sum(w.inflight() for w in workers),
             arrivals=sim.arrivals_seen - self._last_arrivals,
             completions=len(sim.results) - self._last_results,
-            cold_starts=cold - self._last_cold)
+            cold_starts=cold - self._last_cold,
+            fns=self._fn_samples(sim, workers))
         self._last_arrivals = sim.arrivals_seen
         self._last_results = len(sim.results)
         self._last_cold = cold
@@ -156,14 +206,59 @@ class Autoscaler:
         if action in ("up", "down"):
             self._last_scale_t = sim.now
 
+        # per-function prewarm/reap directives act below branch
+        # granularity — the control plane FaaS platforms actually bill at.
+        # Prewarms are refused for functions with no outstanding work and
+        # no arrivals this tick: each prewarm schedules a future
+        # idle_check, so an unconditional one would re-arm the tick chain
+        # forever on a drained system (run() would never terminate).
+        def _admissible(fn, delta):
+            f = sample.fn(fn)
+            return delta < 0 or (f is not None
+                                 and (f.concurrency > 0 or f.arrivals > 0))
+        fn_deltas = tuple(sorted(
+            (fn, n) for fn, n in self.policy.fn_actions(self.window).items()
+            if _admissible(fn, n)))
+        self._apply_fn_actions(sim, fn_deltas)
+
         decision = ScalingDecision(
             t=sim.now, policy=self.policy.name, replicas_before=current,
             desired=desired, applied=len(sim.tree.children), action=action,
             queue=sample.queue, inflight=sample.inflight,
             workers=sample.workers,
-            arrival_rate=sample.arrivals / self.interval_s)
+            arrival_rate=sample.arrivals / self.interval_s,
+            fn_deltas=fn_deltas)
         self.decisions.append(decision)
         return decision
+
+    def _apply_fn_actions(self, sim, fn_deltas) -> None:
+        """Prewarm (+n) on the workers coldest in that fn, reap (-n) off
+        the warmest — deterministic worker order keeps replays exact."""
+        for fn, delta in fn_deltas:
+            if delta > 0:
+                order = sorted(
+                    (w for w in sim._worker_list if w in sim.workers),
+                    key=lambda n: (len(sim.workers[n].replica_sets.get(fn).instances)
+                                   if fn in sim.workers[n].replica_sets else 0,
+                                   sim.workers[n].total_instances, n))
+                done = 0
+                for name in order:
+                    if done >= delta:
+                        break
+                    if sim.prewarm(name, fn):
+                        done += 1
+            elif delta < 0:
+                order = sorted(
+                    (w for w in sim._worker_list if w in sim.workers),
+                    key=lambda n: (-(len(sim.workers[n].replica_sets.get(fn).instances)
+                                     if fn in sim.workers[n].replica_sets else 0),
+                                   n))
+                done = 0
+                for name in order:
+                    if done >= -delta:
+                        break
+                    if sim.reap(name, fn):
+                        done += 1
 
     def _grow(self, sim) -> None:
         bid = self._branch_seq
@@ -186,6 +281,10 @@ class Autoscaler:
     def decision_log(self) -> str:
         """Byte-stable scaling-decision log (same seed => identical)."""
         return "\n".join(d.fmt() for d in self.decisions)
+
+    def decision_records(self) -> List[dict]:
+        """Structured decision log — feed to ``repro.autoscale.replay``."""
+        return [d.to_record() for d in self.decisions]
 
     def summary(self) -> dict:
         ups = sum(d.action == "up" for d in self.decisions)

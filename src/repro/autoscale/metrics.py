@@ -7,12 +7,35 @@ Policies only ever read aggregates of this window — they never touch the
 simulator directly — which keeps every policy a pure function of
 deterministic inputs and makes the scaling-decision log byte-identical
 across same-seed runs.
+
+Samples are keyed down to *function* granularity: every sample carries a
+sorted tuple of :class:`FnSample` rows (per-function queue depth,
+inflight, arrival/completion deltas, warm replica count, and a windowed
+p95 latency estimate) — the signals SLO-aware policies and per-function
+prewarm/reap decisions run on.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, Optional
+from typing import Deque, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class FnSample:
+    """One function's share of a control-loop observation."""
+
+    fn: str
+    queue: int                 # queued requests for this fn across workers
+    inflight: int              # busy slots serving this fn
+    arrivals: int              # fn arrivals since the previous tick
+    completions: int           # fn results recorded since the previous tick
+    warm: int                  # replicas (ready + warming) across workers
+    p95_est: float             # windowed p95 latency estimate (0 => no data)
+
+    @property
+    def concurrency(self) -> int:
+        return self.queue + self.inflight
 
 
 @dataclass(frozen=True)
@@ -27,6 +50,7 @@ class MetricsSample:
     arrivals: int              # requests arrived since the previous tick
     completions: int           # results recorded since the previous tick
     cold_starts: int           # instances cold-started since the previous tick
+    fns: Tuple[FnSample, ...] = ()     # per-function rows, sorted by name
 
     @property
     def concurrency(self) -> int:
@@ -36,6 +60,12 @@ class MetricsSample:
     @property
     def load_per_worker(self) -> float:
         return self.concurrency / max(self.workers, 1)
+
+    def fn(self, name: str) -> Optional[FnSample]:
+        for f in self.fns:
+            if f.fn == name:
+                return f
+        return None
 
 
 class MetricsWindow:
@@ -64,3 +94,49 @@ class MetricsWindow:
     def arrival_rate(self, interval_s: float, tail: Optional[int] = None) -> float:
         """Observed arrivals/s averaged over the window."""
         return self.avg("arrivals", tail) / max(interval_s, 1e-9)
+
+    # ------------------------------------------------- per-function reads
+    def fn_names(self) -> Tuple[str, ...]:
+        last = self.last()
+        return tuple(f.fn for f in last.fns) if last is not None else ()
+
+    def fn_last(self, name: str) -> Optional[FnSample]:
+        last = self.last()
+        return last.fn(name) if last is not None else None
+
+    def fn_avg(self, name: str, attr: str, tail: Optional[int] = None) -> float:
+        """Mean of one function's sample attribute over the window."""
+        if not self.samples:
+            return 0.0
+        xs = list(self.samples)[-tail:] if tail else list(self.samples)
+        vals = [getattr(f, attr) for s in xs
+                for f in (s.fn(name),) if f is not None]
+        return sum(vals) / len(vals) if vals else 0.0
+
+
+class LatencyEstimator:
+    """Bounded per-function latency reservoir feeding ``FnSample.p95_est``.
+
+    Keeps the most recent ``maxlen`` completed-request latencies per
+    function (deterministic: fed in result order by the controller) and
+    reports an empirical p95. A bounded reservoir keeps each tick
+    O(maxlen log maxlen) even under very high completion rates.
+    """
+
+    def __init__(self, maxlen: int = 256):
+        self.maxlen = maxlen
+        self._lat: dict = {}       # fn -> deque[float]
+
+    def observe(self, fn: str, latency: float) -> None:
+        d = self._lat.get(fn)
+        if d is None:
+            d = self._lat[fn] = deque(maxlen=self.maxlen)
+        d.append(latency)
+
+    def p95(self, fn: str) -> float:
+        d = self._lat.get(fn)
+        if not d:
+            return 0.0
+        xs = sorted(d)
+        # nearest-rank p95 (no interpolation: byte-stable across runs)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]

@@ -13,12 +13,20 @@ The menu spans the design space the FaaS literature actually compares:
 - ``target_concurrency`` Knative KPA: stable window + panic window
 - ``predictive``         Holt linear-trend (EWMA level+trend) rate forecast,
                          built for ``daily_cycle`` envelopes
+- ``slo_aware``          per-function p95-vs-SLO pressure scaler; also emits
+                         per-function prewarm/reap directives
+
+Besides the fleet size, a policy may steer *per-function* capacity:
+:meth:`AutoscalePolicy.fn_actions` returns ``{fn: delta}`` prewarm (+n) /
+reap (-n) directives the controller applies through ``sim.prewarm`` /
+``sim.reap`` — scaling signals at the granularity FaaS platforms actually
+bill at.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Mapping
 
 from repro.autoscale.metrics import MetricsWindow
 
@@ -50,6 +58,11 @@ class AutoscalePolicy:
 
     def desired_replicas(self, window: MetricsWindow, current: int) -> int:
         raise NotImplementedError
+
+    def fn_actions(self, window: MetricsWindow) -> Dict[str, int]:
+        """Per-function capacity directives: ``{fn: +n}`` prewarm n
+        replicas, ``{fn: -n}`` reap n idle replicas. Default: none."""
+        return {}
 
 
 @register_autoscaler
@@ -166,3 +179,84 @@ class PredictivePolicy(AutoscalePolicy):
         # never size below what the backlog already demands right now
         backlog = math.ceil(last.concurrency / (4.0 * wpr))
         return max(1, need, backlog)
+
+
+@register_autoscaler
+@dataclass
+class SloAwarePolicy(AutoscalePolicy):
+    """Scale on per-function p95 latency pressure against per-function
+    SLO targets — not on raw load.
+
+    Pressure for a function is ``max(observed p95, projected wait) /
+    (headroom * slo)``: the observed side is the windowed per-function
+    p95 estimate; the projected side is a Little's-law backlog read
+    (outstanding work over the completion rate) so a burst registers
+    before its inflated latencies ever complete. The fleet is sized
+    multiplicatively on the worst function's pressure, and cools down to
+    the load-implied size only when *every* function sits comfortably
+    inside its SLO. Per-function prewarm/reap directives ride on the same
+    signal, so hot functions gain warm replicas ahead of the queue and
+    cold ones stop pinning capacity slots.
+    """
+
+    slo_p95_s: Mapping[str, float] = field(default_factory=dict)
+    default_slo_s: float = 1.0       # target for fns without an explicit SLO
+    headroom: float = 0.7            # aim p95 at headroom * SLO
+    max_step: float = 3.0            # cap on one tick's multiplicative growth
+    down_pressure: float = 0.35      # window-avg pressure allowing scale-down
+    prewarm_pressure: float = 1.0    # fn pressure that triggers a prewarm
+    reap_pressure: float = 0.15      # fn pressure under which idle warm reaps
+    interval_s: float = 1.0          # set by the controller on attach
+    name = "slo_aware"
+
+    def _slo(self, fn: str) -> float:
+        return self.slo_p95_s.get(fn, self.default_slo_s)
+
+    def _fn_pressure(self, window: MetricsWindow, f) -> float:
+        """p95-vs-SLO pressure for one FnSample, backlog-projected."""
+        # Little's law projection: outstanding work drains at the observed
+        # completion rate; a burst shows up here ticks before its inflated
+        # latencies complete and move the measured p95
+        rate = window.fn_avg(f.fn, "completions") / max(self.interval_s, 1e-9)
+        projected = f.concurrency / rate if rate > 0 else (
+            float("inf") if f.concurrency > 0 else 0.0)
+        est = max(f.p95_est, min(projected, 1e6))
+        return est / max(self.headroom * self._slo(f.fn), 1e-9)
+
+    def _pressures(self, window: MetricsWindow) -> Dict[str, float]:
+        last = window.last()
+        if last is None:
+            return {}
+        return {f.fn: self._fn_pressure(window, f) for f in last.fns}
+
+    def desired_replicas(self, window, current):
+        pressures = self._pressures(window)
+        if not pressures:
+            return current
+        worst = max(pressures.values())
+        if worst > 1.0:
+            return math.ceil(current * min(worst, self.max_step))
+        if worst < self.down_pressure:
+            last = window.last()
+            wpr = last.workers / max(last.replicas, 1)
+            implied = math.ceil(last.concurrency / max(4.0 * wpr, 1e-9))
+            return min(current, max(1, implied))
+        return current
+
+    def fn_actions(self, window):
+        acts: Dict[str, int] = {}
+        for fn, pressure in sorted(self._pressures(window).items()):
+            f = window.fn_last(fn)
+            if f is None:
+                continue
+            # prewarm only under *live* demand: the latency reservoir
+            # remembers a hot past, and a prewarm with nothing arriving
+            # would keep the control loop awake forever (each prewarm
+            # schedules a future idle_check event)
+            if (pressure > self.prewarm_pressure
+                    and (f.concurrency > 0 or f.arrivals > 0)):
+                acts[fn] = 1                       # warm capacity ahead of queue
+            elif (pressure < self.reap_pressure
+                    and f.warm > f.inflight and f.warm > 1):
+                acts[fn] = -1                      # stop pinning idle slots
+        return acts

@@ -1,0 +1,76 @@
+"""Counterfactual replay of recorded scaling decisions.
+
+A run's structured decision log (``Autoscaler.decision_records()``) is a
+complete record of *what the control loop did*: the raw policy output per
+tick plus the per-function prewarm/reap directives. :func:`replay` turns
+that record back into a controller whose "policy" simply re-emits the
+recorded outputs tick by tick, so the same decision sequence can be
+re-applied —
+
+- on the same seed/workload, which must reproduce the original decision
+  log byte-for-byte (the regression contract
+  ``tests/test_autoscale.py`` pins), or
+- on a *different* seed, workload shape, or service model: the
+  counterfactual question "what would last Tuesday's scaling have done
+  under today's traffic?".
+
+Records are plain JSON types; :func:`save_decision_log` /
+:func:`load_decision_log` round-trip them through a file.
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Sequence
+
+from repro.autoscale.controller import Autoscaler
+from repro.autoscale.policy import AutoscalePolicy
+
+
+class ReplayPolicy(AutoscalePolicy):
+    """Re-emits a recorded decision sequence instead of deciding.
+
+    Each tick consumes one record: ``desired_replicas`` returns the raw
+    recorded policy output (the controller re-applies its own clamp /
+    cooldown exactly as the original did) and ``fn_actions`` the recorded
+    per-function directives. Past the end of the recording it holds
+    steady. The policy reports the *recorded* policy's name so a replayed
+    decision log is byte-identical to the original.
+    """
+
+    def __init__(self, records: Sequence[dict]):
+        self.records: List[dict] = list(records)
+        self.name = self.records[0]["policy"] if self.records else "replay"
+        self._i = 0
+        self._current: dict = {}
+
+    def desired_replicas(self, window, current):
+        if self._i >= len(self.records):
+            self._current = {}
+            return current
+        self._current = self.records[self._i]
+        self._i += 1
+        return self._current["desired"]
+
+    def fn_actions(self, window):
+        return {fn: int(n)
+                for fn, n in self._current.get("fn_deltas", ())}
+
+
+def replay(records: Sequence[dict], **autoscaler_kwargs) -> Autoscaler:
+    """Build an :class:`Autoscaler` that re-applies ``records``.
+
+    Pass the same controller kwargs (interval, bounds, cooldown,
+    workers_per_replica, ...) as the recording run, then attach to a
+    simulator with ``sim.attach_autoscaler(...)`` as usual.
+    """
+    return Autoscaler(ReplayPolicy(records), **autoscaler_kwargs)
+
+
+def save_decision_log(records: Sequence[dict], path: str) -> None:
+    with open(path, "w") as fh:
+        json.dump({"decisions": list(records)}, fh, indent=1)
+
+
+def load_decision_log(path: str) -> List[dict]:
+    with open(path) as fh:
+        return json.load(fh)["decisions"]

@@ -9,8 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from dataclasses import dataclass, field, replace
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Optional, Sequence
 
 # ---------------------------------------------------------------------------
 # Model configuration

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import json
 import threading
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict
 
 from repro.core.types import FunctionConfig
 

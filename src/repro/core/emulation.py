@@ -15,7 +15,7 @@ Pipeline, exactly as the figure prescribes:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

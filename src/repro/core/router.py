@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Mapping, Sequence
 
 from repro.core.types import Request
 
@@ -29,10 +29,18 @@ class WorkerState:
     capacity: int = 1                  # slots across warm instances
     warm_fns: frozenset = frozenset()
     healthy: bool = True
+    # per-function depth: queued requests and immediately-usable warm
+    # slots by fn — what lets least-loaded routing become warm-aware
+    fn_queue: Mapping[str, int] = field(default_factory=dict)
+    fn_free_slots: Mapping[str, int] = field(default_factory=dict)
 
     @property
     def load(self) -> float:
         return (self.queue_len + self.inflight) / max(self.capacity, 1)
+
+    def fn_depth(self, fn: str) -> int:
+        """Queued requests for one function on this worker."""
+        return self.fn_queue.get(fn, 0)
 
 
 class StateView:
@@ -52,7 +60,10 @@ class StateView:
 
     def get(self, worker: str, t: float = 0.0) -> WorkerState:
         src = self._now if self.staleness_s == 0 else self._stale
-        return src.get(worker, WorkerState(worker))
+        state = src.get(worker)
+        # build the empty default lazily: get() runs once per candidate
+        # worker on every routing decision
+        return state if state is not None else WorkerState(worker)
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +107,20 @@ def warm_affinity_policy(req, workers, view, rng, t):
     return min(pool, key=lambda w: (view.get(w, t).load, rng.random()))
 
 
+def warm_least_loaded_policy(req, workers, view, rng, t):
+    """Least-loaded among workers with a *free warm slot* for req.fn.
+
+    Sharper than ``warm_affinity`` (which only knows the binary warm set):
+    a worker whose replicas of req.fn are all saturated counts as cold
+    here, and ties break on the function's own queue depth before the
+    worker-wide load — per-function state from the scheduling core."""
+    states = [(w, view.get(w, t)) for w in workers]   # one lookup per worker
+    warm = [ws for ws in states if ws[1].fn_free_slots.get(req.fn, 0) > 0]
+    pool = warm or states
+    return min(pool, key=lambda ws: (ws[1].fn_depth(req.fn), ws[1].load,
+                                     rng.random()))[0]
+
+
 POLICIES: Dict[str, Callable] = {
     "random": lambda: random_policy,
     "round_robin": round_robin_policy,
@@ -103,6 +128,7 @@ POLICIES: Dict[str, Callable] = {
     "least_loaded": lambda: least_loaded_policy,
     "pow2": lambda: pow2_policy,
     "warm_affinity": lambda: warm_affinity_policy,
+    "warm_least_loaded": lambda: warm_least_loaded_policy,
 }
 
 STATELESS = {"random", "round_robin", "hash"}
@@ -122,6 +148,9 @@ class LBNode:
 
     def __post_init__(self):
         self._policy = POLICIES[self.policy_name]()
+        self._child_names: List[str] = [c.name for c in self.children]
+        self._child_idx: Dict[str, "LBNode"] = {c.name: c
+                                                for c in self.children}
 
     @property
     def is_leaf(self) -> bool:
@@ -132,10 +161,8 @@ class LBNode:
         """Returns (worker_id, hops)."""
         if self.is_leaf:
             return self._policy(req, self.workers, view, rng, t), _hops + 1
-        child = self._policy(req, [c.name for c in self.children],
-                             view, rng, t)
-        node = next(c for c in self.children if c.name == child)
-        return node.route(req, view, rng, t, _hops + 1)
+        child = self._policy(req, self._child_names, view, rng, t)
+        return self._child_idx[child].route(req, view, rng, t, _hops + 1)
 
     def all_workers(self) -> List[str]:
         if self.is_leaf:
@@ -149,9 +176,13 @@ class LBNode:
     def add_branch(self, node: "LBNode"):
         assert not self.is_leaf, "cannot add a branch to a leaf"
         self.children.append(node)
+        self._child_names.append(node.name)
+        self._child_idx[node.name] = node
 
     def remove_branch(self, name: str):
         self.children = [c for c in self.children if c.name != name]
+        self._child_names = [c.name for c in self.children]
+        self._child_idx = {c.name: c for c in self.children}
 
 
 def build_leaf(name: str, workers: Sequence[str],

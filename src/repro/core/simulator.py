@@ -16,11 +16,12 @@ from __future__ import annotations
 import heapq
 import itertools
 import random
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 from repro.core.config_store import ConfigStore
 from repro.core.router import LBNode, StateView, WorkerState
+from repro.core.scheduling import (UNLIMITED_SLOTS, FnQueues,
+                                   FunctionReplicaSet, Instance)
 from repro.core.types import FunctionConfig, Request, RequestResult, TelemetryRecord
 
 
@@ -51,41 +52,78 @@ class SyntheticServiceModel:
 # Simulator
 # ---------------------------------------------------------------------------
 
-@dataclass
-class _Instance:
-    iid: str
-    fn: str
-    slots: int                 # 0 => unlimited (soft)
-    busy: int = 0
-    last_used: float = 0.0
-    ready_t: float = 0.0       # cold start completes
-
-    def has_free_slot(self) -> bool:
-        return self.busy < self.slots if self.slots > 0 else True
+# LB policies that read the per-function WorkerState layer; the simulator
+# only pays for building those snapshots when the tree routes with one
+_FN_STATE_POLICIES = frozenset({"warm_least_loaded"})
 
 
-@dataclass
+def _tree_uses_fn_state(node) -> bool:
+    return (node.policy_name in _FN_STATE_POLICIES
+            or any(_tree_uses_fn_state(c) for c in node.children))
+
+# Re-exported for callers that patched/inspected the old private name.
+_Instance = Instance
+
+
 class _Worker:
-    name: str
-    capacity_slots: int = 16           # hardware concurrency of the node
-    slowdown: float = 1.0              # straggler factor
-    healthy: bool = True
-    instances: Dict[str, List[_Instance]] = field(default_factory=dict)
-    queue: List[Request] = field(default_factory=list)
-    busy_time: float = 0.0
-    cold_starts: int = 0
-    instances_started: int = 0
-    poke_times: set = field(default_factory=set)   # dedupe scheduled pokes
+    """One node: per-function replica sets + per-function FIFO queues,
+    indexed so every hot-path read is O(affected function)."""
+
+    def __init__(self, name: str, capacity_slots: int = 16):
+        self.name = name
+        self.capacity_slots = capacity_slots   # hardware concurrency of node
+        self.slowdown = 1.0                    # straggler factor
+        self.healthy = True
+        self.replica_sets: Dict[str, FunctionReplicaSet] = {}
+        self.iid_index: Dict[str, Instance] = {}   # iid -> live instance
+        self.total_instances = 0
+        self._inflight = 0                 # incremental busy-slot count
+        self.queue = FnQueues()
+        self.busy_time = 0.0
+        self.cold_starts = 0
+        self.instances_started = 0
+        self.poke_times: set = set()       # dedupe scheduled pokes
+
+    @property
+    def instances(self) -> Dict[str, List[Instance]]:
+        """Legacy fn -> instance-list view (tests/examples read this)."""
+        return {fn: rs.instances for fn, rs in self.replica_sets.items()
+                if rs.instances}
+
+    def add_instance(self, inst: Instance) -> None:
+        rs = self.replica_sets.get(inst.fn)
+        if rs is None:
+            rs = self.replica_sets[inst.fn] = FunctionReplicaSet(inst.fn)
+        rs.instances.append(inst)
+        self.iid_index[inst.iid] = inst
+        self.total_instances += 1
+
+    def remove_instance(self, inst: Instance) -> None:
+        self.replica_sets[inst.fn].instances.remove(inst)
+        self.iid_index.pop(inst.iid, None)
+        self.total_instances -= 1
+
+    def clear_instances(self) -> None:
+        self.replica_sets.clear()
+        self.iid_index.clear()
+        self.total_instances = 0
+        self._inflight = 0
 
     def warm_fns(self) -> frozenset:
-        return frozenset(fn for fn, il in self.instances.items() if il)
+        return frozenset(fn for fn, rs in self.replica_sets.items()
+                         if rs.instances)
 
     def inflight(self) -> int:
-        return sum(i.busy for il in self.instances.values() for i in il)
+        return self._inflight
 
     def slots_total(self) -> int:
         return sum((i.slots if i.slots > 0 else max(i.busy, 1))
-                   for il in self.instances.values() for i in il) or 1
+                   for i in self.iid_index.values()) or 1
+
+    def fn_free_slots(self, now: float) -> Dict[str, int]:
+        """Per-function immediately-usable warm slots (router signal)."""
+        return {fn: rs.ready_free_slots(now)
+                for fn, rs in self.replica_sets.items() if rs.instances}
 
 
 class Simulator:
@@ -108,6 +146,8 @@ class Simulator:
             w: _Worker(w, capacity_slots=worker_capacity_slots)
             for w in tree.all_workers()}
         self._worker_list = list(self.workers)   # cache (rebuilt on add/remove)
+        self._healthy_count = len(self.workers)  # incremental: O(1) arrivals
+        self._fn_view_needed = _tree_uses_fn_state(tree)
         self._draining: Dict[str, _Worker] = {}  # removed, in-flight finishing
         self._events: list = []
         self._pending_real = 0       # events besides autoscale_tick in queue
@@ -116,6 +156,7 @@ class Simulator:
         self.now = 0.0
         self.events_processed = 0
         self.arrivals_seen = 0
+        self.arrivals_by_fn: Dict[str, int] = {}   # per-fn scaling signal
         self.cold_starts_total = 0   # survives worker removal (scale-down)
         self.results: List[RequestResult] = []
         self.telemetry: List[TelemetryRecord] = []
@@ -145,6 +186,9 @@ class Simulator:
             self.workers[w] = _Worker(
                 w, capacity_slots=self.worker_capacity_slots)
         self._worker_list = list(self.workers)
+        self._recount_healthy()
+        self._fn_view_needed = (self._fn_view_needed
+                                or _tree_uses_fn_state(node))
 
     def remove_branch(self, name: str):
         """Remove a branch *safely*: queued requests on its workers are
@@ -163,11 +207,15 @@ class Simulator:
                 w = self.workers.pop(wname, None)
                 if w is None:
                     continue
-                for req in w.queue:         # re-route queued work
+                for req in w.queue.drain_all():   # re-route queued work
                     self._push(self.now, "reroute", req)
-                w.queue.clear()
                 if w.inflight() > 0:
                     self._draining[wname] = w
+        self._recount_healthy()
+
+    def _recount_healthy(self):
+        self._healthy_count = sum(
+            1 for w in self._worker_list if self.workers[w].healthy)
 
     def prewarm(self, worker: str, fn: str) -> bool:
         """Proactively start (cold-start now, serve warm later) one
@@ -186,6 +234,30 @@ class Simulator:
         # would pin a capacity slot forever
         self._push(inst.ready_t + cfg.idle_timeout_s, "idle_check",
                    (worker, inst.iid))
+        # a prewarm onto a worker already holding queued work for this fn
+        # must wake its dispatch when the replica is ready, or that work
+        # only drains on the next unrelated enqueue/finish
+        if w.queue.depth(fn) > 0:
+            self._poke(w, inst.ready_t)
+        return True
+
+    def reap(self, worker: str, fn: str) -> bool:
+        """Stop one idle warm instance of ``fn`` on a worker — the
+        autoscaler's per-function scale-down companion to :meth:`prewarm`.
+        Returns False if the worker is gone/unhealthy or holds no idle
+        ready replica of that function."""
+        w = self.workers.get(worker)
+        if w is None or not w.healthy:
+            return False
+        rs = w.replica_sets.get(fn)
+        inst = rs.idle_ready(self.now) if rs is not None else None
+        if inst is None:
+            return False
+        w.remove_instance(inst)
+        if len(w.queue) > 0:       # freed capacity may unblock other fns
+            self._dispatch(w)
+        else:
+            self._refresh_view(w)
         return True
 
     def attach_autoscaler(self, scaler, *, first_tick_s: float = None):
@@ -230,10 +302,18 @@ class Simulator:
 
     # ------------------------------------------------------------- events
     def _refresh_view(self, w: _Worker):
-        self.view.update(WorkerState(
-            worker=w.name, queue_len=len(w.queue), inflight=w.inflight(),
-            capacity=w.slots_total(), warm_fns=w.warm_fns(),
-            healthy=w.healthy), self.now)
+        if self._fn_view_needed:     # only per-fn routing pays for the dicts
+            state = WorkerState(
+                worker=w.name, queue_len=len(w.queue), inflight=w.inflight(),
+                capacity=w.slots_total(), warm_fns=w.warm_fns(),
+                healthy=w.healthy, fn_queue=w.queue.depths(),
+                fn_free_slots=w.fn_free_slots(self.now))
+        else:
+            state = WorkerState(
+                worker=w.name, queue_len=len(w.queue), inflight=w.inflight(),
+                capacity=w.slots_total(), warm_fns=w.warm_fns(),
+                healthy=w.healthy)
+        self.view.update(state, self.now)
 
     def _on_autoscale_tick(self, _payload):
         if self.autoscaler is None:
@@ -245,13 +325,17 @@ class Simulator:
 
     def _on_arrival(self, req: Request):
         self.arrivals_seen += 1
-        healthy = [w for w in self._worker_list
-                   if self.workers[w].healthy]
-        if not healthy:
+        self.arrivals_by_fn[req.fn] = self.arrivals_by_fn.get(req.fn, 0) + 1
+        # healthy set is tracked incrementally; the full list is only
+        # materialised on the rare stale-routing re-roll (the seed built
+        # it on every arrival: O(fleet) on the hottest event)
+        if self._healthy_count == 0:
             self._record_fail(req, "no healthy workers")
             return
         wid, hops = self.tree.route(req, self.view, self.rng, self.now)
         if not self.workers[wid].healthy:          # stale routing: re-roll
+            healthy = [w for w in self._worker_list
+                       if self.workers[w].healthy]
             wid = self.rng.choice(healthy)
         w = self.workers[wid]
         cfg = self.store.get(req.fn)
@@ -274,7 +358,7 @@ class Simulator:
         if not w.healthy:
             self._record_fail(req, "worker died")
             return
-        w.queue.append(req)
+        w.queue.push(req, self.store.get(req.fn).timeout_s)
         self._dispatch(w)
 
     def _on_reroute(self, req: Request):
@@ -282,12 +366,13 @@ class Simulator:
         through the shrunk tree. Unlike an arrival this reuses the
         request's telemetry record and hedge timer — it is the same
         request, not new offered load."""
-        healthy = [w for w in self._worker_list if self.workers[w].healthy]
-        if not healthy:
+        if self._healthy_count == 0:
             self._record_fail(req, "no healthy workers")
             return
         wid, hops = self.tree.route(req, self.view, self.rng, self.now)
         if not self.workers[wid].healthy:          # stale routing: re-roll
+            healthy = [w for w in self._worker_list
+                       if self.workers[w].healthy]
             wid = self.rng.choice(healthy)
         req._worker = wid
         self._push(self.now + self.hop_s * hops, "enqueue", req)
@@ -304,67 +389,154 @@ class Simulator:
         if w is None:                   # branch already scaled away
             self._draining.pop(worker, None)
             return
+        if w.healthy:
+            self._healthy_count -= 1
         w.healthy = False
-        for req in w.queue:
+        for req in w.queue.drain_all():
             self._record_fail(req, "worker died")
-        w.queue.clear()
-        w.instances.clear()
+        w.clear_instances()
         self._refresh_view(w)
 
     def _on_recover(self, worker: str):
         w = self.workers.get(worker)
         if w is None:
             return
+        if not w.healthy:
+            self._healthy_count += 1
         w.healthy = True
         self._refresh_view(w)
 
     # ----------------------------------------------------- worker mechanics
     def _dispatch(self, w: _Worker):
+        """Serve a worker's backlog through the per-function index.
+
+        Queue timeouts are flushed from the deadline heap (the flat scan
+        checked every queued request each pass; the heap surfaces exactly
+        the expired ones, in the same arrival order). Then only functions
+        that can make progress are merge-scanned by global arrival
+        sequence, so a saturated function's whole backlog is skipped in
+        O(1) while cross-function service order — and hence the service
+        model's RNG stream — matches the flat scan byte-for-byte.
+        """
         if not w.healthy:
             return
-        still = []
-        # free slots on still-warming instances: queue onto those before
-        # spawning more replicas (c=1 instances expose 0 extra slots, so
-        # Lambda-style one-instance-per-request behaviour is preserved)
-        warming_free: Dict[str, int] = {}
-        for fn, il in w.instances.items():
-            warming_free[fn] = sum(
-                (i.slots if i.slots > 0 else 10 ** 9) - i.busy
-                for i in il if i.ready_t > self.now)
-        # free ready slots, warming slots, and instance-start headroom only
-        # shrink while this scan runs, so one fully-failed attempt proves
-        # every later same-fn attempt fails too: skip them in O(1) instead
-        # of rescanning instances (deep-backlog scans were quadratic)
-        saturated: set = set()
-        for req in w.queue:
-            cfg = self.store.get(req.fn)
-            if self.now - req.arrival_t > cfg.timeout_s:
+        # the flat scan passed the pre-scan queue length to the service
+        # model (the list was only compacted afterwards) — preserve that
+        qlen_at_scan = len(w.queue)
+        if w.queue.has_expired(self.now):
+            for req in w.queue.pop_expired(self.now):
                 self._record_fail(req, "queue timeout")
-                continue
-            if cfg.name in saturated:
-                still.append(req)
-                continue
-            inst = self._pick_instance(w, cfg)
-            if inst is not None:
-                self._start_service(w, inst, req, cfg)
-                continue
-            if warming_free.get(cfg.name, 0) > 0:
-                warming_free[cfg.name] -= 1       # wait on a warming instance
-                nxt = min(i.ready_t for i in w.instances[cfg.name]
-                          if i.ready_t > self.now)
-                self._poke(w, nxt)
-                still.append(req)
-                continue
-            inst = self._maybe_start_instance(w, cfg)
-            if inst is not None:
-                warming_free[cfg.name] = warming_free.get(cfg.name, 0) \
-                    + (inst.slots if inst.slots > 0 else 10 ** 9) - 1
-                self._poke(w, inst.ready_t)
-            else:
-                saturated.add(cfg.name)
-            still.append(req)
-        w.queue = still
+        if len(w.queue):
+            self._merge_scan(w, qlen_at_scan)
         self._refresh_view(w)
+
+    def _merge_scan(self, w: _Worker, qlen_at_scan: int):
+        now = self.now
+        q = w.queue
+        active = q.active_fns()
+        if len(active) == 1:           # overwhelmingly common: no merge
+            self._scan_one_fn(w, active[0], qlen_at_scan)
+            return
+        # per-fn scan state: [cfg, warming-free slots, kept prefix].
+        # Warming free slots are counted up front (as the flat scan did):
+        # queued requests wait on those before spawning more replicas
+        # (c=1 instances expose 0 extra slots, so Lambda-style
+        # one-instance-per-request behaviour is preserved). Free ready
+        # slots, warming slots, and instance-start headroom only shrink
+        # during the scan, so one fully-failed attempt proves every later
+        # same-fn attempt fails too: the function drops out of the merge.
+        state: dict = {}
+        heap = []
+        for fn in active:
+            head = q.scan_head(fn)
+            if head is None:
+                continue
+            rs = w.replica_sets.get(fn)
+            state[fn] = [self.store.get(fn), rs.warming_free(now)
+                         if rs is not None else 0, []]
+            heap.append((head._wseq, fn))
+        heapq.heapify(heap)
+        while heap:
+            _, fn = heapq.heappop(heap)
+            st = state[fn]
+            cfg, kept = st[0], st[2]
+            req = q.scan_head(fn)
+            q.pop_head(fn)
+            rs = w.replica_sets.get(fn)
+            inst = rs.pick(now) if rs is not None else None
+            saturated = False
+            if inst is not None:
+                q.mark_served(req)
+                self._start_service(w, inst, req, cfg, qlen_at_scan)
+            elif st[1] > 0:
+                st[1] -= 1                  # wait on a warming instance
+                self._poke(w, rs.next_ready_after(now))
+                kept.append(req)
+            else:
+                started = self._maybe_start_instance(w, cfg)
+                if started is None:
+                    kept.append(req)
+                    saturated = True
+                elif started.ready_t <= now:
+                    # instant start (explicit cold_start_s=0.0): the new
+                    # replica is ready capacity, not warming — serve on
+                    # it directly (counting it as warming would strand a
+                    # later request waiting on a next_ready that never
+                    # comes)
+                    q.mark_served(req)
+                    self._start_service(w, started, req, cfg, qlen_at_scan)
+                else:
+                    st[1] += (started.slots if started.slots > 0
+                              else UNLIMITED_SLOTS) - 1
+                    self._poke(w, started.ready_t)
+                    kept.append(req)
+            if not saturated:
+                head = q.scan_head(fn)
+                if head is not None:
+                    heapq.heappush(heap, (head._wseq, fn))
+        for fn, st in state.items():
+            q.restore(fn, st[2])
+
+    def _scan_one_fn(self, w: _Worker, fn: str, qlen_at_scan: int):
+        """Heap-free scan when a single function holds all queued work —
+        FIFO order *is* global order, so semantics match the merge."""
+        now = self.now
+        q = w.queue
+        cfg = self.store.get(fn)
+        rs = w.replica_sets.get(fn)
+        warming = rs.warming_free(now) if rs is not None else 0
+        kept = []
+        while True:
+            req = q.scan_head(fn)
+            if req is None:
+                break
+            q.pop_head(fn)
+            inst = rs.pick(now) if rs is not None else None
+            if inst is not None:
+                q.mark_served(req)
+                self._start_service(w, inst, req, cfg, qlen_at_scan)
+                continue
+            if warming > 0:
+                warming -= 1                # wait on a warming instance
+                self._poke(w, rs.next_ready_after(now))
+                kept.append(req)
+                continue
+            started = self._maybe_start_instance(w, cfg)
+            if started is None:
+                kept.append(req)
+                break                       # saturated: rest stays queued
+            rs = w.replica_sets[fn]         # created on first start
+            if started.ready_t <= now:
+                # instant start (explicit cold_start_s=0.0): ready
+                # capacity, not warming — serve the trigger directly
+                q.mark_served(req)
+                self._start_service(w, started, req, cfg, qlen_at_scan)
+                continue
+            warming += (started.slots if started.slots > 0
+                        else UNLIMITED_SLOTS) - 1
+            self._poke(w, started.ready_t)
+            kept.append(req)
+        q.restore(fn, kept)
 
     def _poke(self, w: "_Worker", t: float):
         key = round(t, 9)
@@ -379,36 +551,33 @@ class Simulator:
         w.poke_times.discard(round(self.now, 9))
         self._dispatch(w)
 
-    def _pick_instance(self, w: _Worker, cfg) -> Optional[_Instance]:
-        best = None
-        for inst in w.instances.get(cfg.name, []):
-            if inst.ready_t <= self.now and inst.has_free_slot():
-                if best is None or inst.busy > best.busy:   # pack densest first
-                    best = inst
-        return best
-
-    def _maybe_start_instance(self, w: _Worker, cfg) -> Optional[_Instance]:
-        il = w.instances.setdefault(cfg.name, [])
-        total_inst = sum(len(x) for x in w.instances.values())
-        if len(il) >= cfg.max_instances_per_worker or total_inst >= w.capacity_slots:
+    def _maybe_start_instance(self, w: _Worker, cfg) -> Optional[Instance]:
+        rs = w.replica_sets.get(cfg.name)
+        if ((rs is not None and len(rs) >= cfg.max_instances_per_worker)
+                or w.total_instances >= w.capacity_slots):
             return None
-        cold = cfg.cold_start_s or self.cold_default
-        inst = _Instance(iid=f"{w.name}/i{next(self._iid)}", fn=cfg.name,
-                         slots=cfg.concurrency,
-                         ready_t=self.now + cold * w.slowdown,
-                         last_used=self.now)
-        il.append(inst)
+        # an explicitly configured cold_start_s=0.0 means *instant*, only
+        # an unset (None) config falls back to the platform default
+        cold = (cfg.cold_start_s if cfg.cold_start_s is not None
+                else self.cold_default)
+        inst = Instance(iid=f"{w.name}/i{next(self._iid)}", fn=cfg.name,
+                        slots=cfg.concurrency,
+                        ready_t=self.now + cold * w.slowdown,
+                        last_used=self.now)
+        w.add_instance(inst)
         w.cold_starts += 1
         w.instances_started += 1
         self.cold_starts_total += 1
         return inst
 
-    def _start_service(self, w: _Worker, inst: _Instance, req: Request, cfg):
+    def _start_service(self, w: _Worker, inst: Instance, req: Request, cfg,
+                       queue_len: int):
         inst.busy += 1
+        w._inflight += 1
         inst.last_used = self.now
         cold = inst.ready_t > req.arrival_t
         dur, ok = self.model.sample(
-            cfg, batch_size=inst.busy, queue_len=len(w.queue),
+            cfg, batch_size=inst.busy, queue_len=queue_len,
             prompt=req.size, cold=cold, fn_cost=self.fn_cost(req.fn))
         dur *= w.slowdown
         # unlimited concurrency: utilization-triggered replica pre-start
@@ -429,13 +598,13 @@ class Simulator:
         # a drained-and-retired (or failed-then-removed) worker may be gone
         # entirely; the result below must still be recorded either way
         w = self._draining.get(wname) if draining else self.workers[wname]
-        for il in (w.instances.values() if w is not None else ()):
-            for inst in il:
-                if inst.iid == iid:
-                    inst.busy -= 1
-                    inst.last_used = self.now
-                    self._push(self.now + self.store.get(req.fn).idle_timeout_s,
-                               "idle_check", (wname, iid))
+        inst = w.iid_index.get(iid) if w is not None else None
+        if inst is not None:               # O(1) via the iid index
+            inst.busy -= 1
+            w._inflight -= 1
+            inst.last_used = self.now
+            self._push(self.now + self.store.get(req.fn).idle_timeout_s,
+                       "idle_check", (wname, iid))
         if draining and w is not None and w.inflight() == 0:
             self._draining.pop(wname, None)   # retire even if hedge lost
         # rid 0 is falsy, so `or` would misattribute a hedge of request 0
@@ -458,14 +627,22 @@ class Simulator:
     def _on_idle_check(self, payload):
         wname, iid = payload
         w = self.workers.get(wname)
-        if w is None:                   # branch scaled away meanwhile
+        if w is None:
+            # branch scaled away meanwhile, or the worker is draining in
+            # self._draining: draining workers only finish in-flight work,
+            # they never reap (pinned by tests/test_core_platform.py)
             return
-        for fn, il in w.instances.items():
-            for inst in list(il):
-                if (inst.iid == iid and inst.busy == 0 and
-                        self.now - inst.last_used >=
-                        self.store.get(fn).idle_timeout_s - 1e-9):
-                    il.remove(inst)
+        inst = w.iid_index.get(iid)        # O(1) via the iid index
+        if (inst is not None and inst.busy == 0 and
+                self.now - inst.last_used >=
+                self.store.get(inst.fn).idle_timeout_s - 1e-9):
+            w.remove_instance(inst)
+            if len(w.queue) > 0:
+                # the freed capacity slot may unblock another function's
+                # backlog (the seed left such work stranded until the
+                # next unrelated enqueue/finish — or forever)
+                self._dispatch(w)
+                return
         self._refresh_view(w)
 
     def _record_fail(self, req: Request, err: str):

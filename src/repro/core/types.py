@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 _req_ids = itertools.count()
 
@@ -23,7 +23,10 @@ class FunctionConfig:
     concurrency: int = 1
     timeout_s: float = 30.0            # request timeout (failure beyond this)
     idle_timeout_s: float = 10.0       # instance stop after idleness
-    cold_start_s: float = 0.0          # 0 => measure/charge real compile+load
+    # None => platform default (simulator's cold_start_default_s; the real
+    # engine measures compile+load). An explicit 0.0 means *instant* —
+    # the seed's falsy-or check silently replaced it with the default.
+    cold_start_s: Optional[float] = None
     memory_mb: int = 512
     max_instances_per_worker: int = 8
     util_scale_threshold: float = 0.8  # "unlimited" mode replica trigger

@@ -27,7 +27,7 @@ import re
 import shutil
 import tempfile
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import ml_dtypes  # noqa: F401  (registers bfloat16/f8 dtypes with numpy)

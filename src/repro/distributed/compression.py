@@ -13,7 +13,6 @@ hypothesis property test checks the error-feedback contraction invariant.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax

@@ -9,10 +9,8 @@ The model layer calls these when constructed with attn_impl="pallas".
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, applicable_shapes, assigned_archs, get_config
-from repro.distributed.sharding import (RULES_BY_MODE, make_resolver,
+from repro.distributed.sharding import (make_resolver,
                                         rules_for_cfg, tree_shardings,
                                         with_shardings)
 from repro.launch.mesh import make_production_mesh

@@ -20,7 +20,7 @@ reflects the XLA program actually being lowered for the mesh.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

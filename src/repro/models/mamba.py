@@ -37,7 +37,6 @@ def _ssm_chunk_scan(dt: jax.Array, xi: jax.Array, Bc: jax.Array, Cc: jax.Array,
     VMEM blocking (repro.kernels.mamba_scan).
     """
     B, S, DI = xi.shape
-    N = A.shape[1]
     chunk = min(chunk, S)
     if S % chunk:
         chunk = S

@@ -21,8 +21,6 @@ Design notes (DESIGN.md §5):
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -17,14 +17,13 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial, cached_property
-from typing import Any, Dict, List, Optional, Tuple
+from functools import cached_property
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import BLOCK_ATTN, BLOCK_MAMBA, ModelConfig, ShapeConfig
+from repro.configs.base import BLOCK_ATTN, ModelConfig, ShapeConfig
 from repro.models import attention as attn_mod
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod

@@ -15,9 +15,9 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from random import Random
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -150,7 +150,6 @@ class Worker:
                 still.append(p)
                 continue
             slot = inst.kv.free_slots()[0]
-            t0 = time.monotonic()
             bl = _bucket(p.req.size)
             toks = np.zeros((1, bl), np.int32)
             payload = np.asarray(p.req.payload if p.req.payload is not None

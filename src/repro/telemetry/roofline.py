@@ -21,7 +21,7 @@ from __future__ import annotations
 import json
 import re
 from dataclasses import asdict, dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
 # --- TPU v5e-class hardware constants (per chip) ---------------------------
 PEAK_FLOPS = 197e12          # bf16

@@ -14,7 +14,7 @@ param sharding resolver applies verbatim to optimizer state.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -126,7 +126,6 @@ class Adafactor:
             new_p = p.astype(jnp.float32) - lr * u
             return new_p.astype(p.dtype), ns
 
-        is_stats = lambda x: isinstance(x, dict) and ("r" in x or "v" in x)
         out = jax.tree.map(upd, grads, state["stats"], params, is_leaf=None)
         # out leaves are (param, stats) tuples
         flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))

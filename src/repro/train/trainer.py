@@ -6,7 +6,6 @@ what ``launch/train.py`` executes for real on reduced models.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

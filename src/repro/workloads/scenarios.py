@@ -45,12 +45,13 @@ def list_scenarios() -> List[str]:
 
 @register_scenario("steady")
 def steady(*, fn: str = "fn", rps: float = 200.0, duration_s: float = 30.0,
-           prompt_tokens: int = 16, seed: int = 1,
+           prompt_tokens: int = 16, seed: int = 1, slo_p95_s: float = 0.5,
            rid_base: Optional[int] = 0) -> MixedWorkload:
     """Baseline homogeneous Poisson load on a single function."""
     return MixedWorkload(
         PoissonArrivals(rps),
-        [FunctionProfile(fn, size=SizeDist.const(prompt_tokens))],
+        [FunctionProfile(fn, size=SizeDist.const(prompt_tokens),
+                         slo_p95_s=slo_p95_s)],
         duration_s=duration_s, seed=seed, rid_base=rid_base)
 
 
@@ -58,13 +59,15 @@ def steady(*, fn: str = "fn", rps: float = 200.0, duration_s: float = 30.0,
 def flash_crowd(*, fn: str = "fn", base_rps: float = 50.0,
                 burst_rps: float = 1500.0, mean_burst_s: float = 2.0,
                 mean_calm_s: float = 10.0, duration_s: float = 30.0,
-                seed: int = 1, rid_base: Optional[int] = 0) -> MixedWorkload:
+                seed: int = 1, slo_p95_s: float = 1.0,
+                rid_base: Optional[int] = 0) -> MixedWorkload:
     """MMPP on/off: calm background traffic punctured by sharp spikes —
     the shape that punishes slow cold starts and stale LB state."""
     return MixedWorkload(
         BurstyArrivals(rate_on=burst_rps, rate_off=base_rps,
                        mean_on_s=mean_burst_s, mean_off_s=mean_calm_s),
-        [FunctionProfile(fn, size=SizeDist.lognormal(24, 0.5))],
+        [FunctionProfile(fn, size=SizeDist.lognormal(24, 0.5),
+                         slo_p95_s=slo_p95_s)],
         duration_s=duration_s, seed=seed, rid_base=rid_base)
 
 
@@ -72,13 +75,14 @@ def flash_crowd(*, fn: str = "fn", base_rps: float = 50.0,
 def daily_cycle(*, fn: str = "fn", mean_rps: float = 150.0,
                 amplitude: float = 0.9, period_s: float = 60.0,
                 duration_s: float = 60.0, seed: int = 1,
+                slo_p95_s: float = 0.8,
                 rid_base: Optional[int] = 0) -> MixedWorkload:
     """Sinusoidal diurnal envelope, compressed to ``period_s`` per "day"
     so a full peak/trough cycle fits in one simulator run."""
     return MixedWorkload(
         DiurnalArrivals(base_rate=mean_rps, amplitude=amplitude,
                         period_s=period_s),
-        [FunctionProfile(fn, size=SizeDist.const(16))],
+        [FunctionProfile(fn, size=SizeDist.const(16), slo_p95_s=slo_p95_s)],
         duration_s=duration_s, seed=seed, rid_base=rid_base)
 
 
@@ -88,12 +92,16 @@ def multi_tenant(*, rps: float = 300.0, duration_s: float = 30.0,
     """Three tenants with distinct cost classes: chat (frequent, small),
     embed (mid), batch (rare, huge prompts). Feeds RQ-B two+ cost
     classes and exercises warm-affinity routing."""
+    # per-tenant SLOs: interactive chat is tight, embedding mid, batch loose
     profiles = [
-        FunctionProfile("chat", weight=6.0, size=SizeDist.lognormal(32, 0.6)),
-        FunctionProfile("embed", weight=3.0, size=SizeDist.uniform(8, 64)),
+        FunctionProfile("chat", weight=6.0, size=SizeDist.lognormal(32, 0.6),
+                        slo_p95_s=0.5),
+        FunctionProfile("embed", weight=3.0, size=SizeDist.uniform(8, 64),
+                        slo_p95_s=1.0),
         FunctionProfile("batch", weight=1.0,
                         size=SizeDist.choice([256, 512, 1024],
-                                             [0.5, 0.3, 0.2])),
+                                             [0.5, 0.3, 0.2]),
+                        slo_p95_s=5.0),
     ]
     return MixedWorkload(PoissonArrivals(rps), profiles,
                          duration_s=duration_s, seed=seed, rid_base=rid_base)

@@ -68,11 +68,15 @@ class SizeDist:
 
 @dataclass(frozen=True)
 class FunctionProfile:
-    """One tenant function in a mix: routing weight + prompt-size shape."""
+    """One tenant function in a mix: routing weight + prompt-size shape +
+    latency objective."""
 
     fn: str
     weight: float = 1.0
     size: SizeDist = field(default_factory=lambda: SizeDist.const(16))
+    # per-function p95 latency SLO the slo_aware autoscaler targets;
+    # None => no explicit objective for this tenant
+    slo_p95_s: Optional[float] = None
 
 
 class MixedWorkload:
@@ -100,6 +104,12 @@ class MixedWorkload:
 
     def fns(self) -> List[str]:
         return [p.fn for p in self.profiles]
+
+    def slo_targets(self) -> dict:
+        """Per-function p95 SLOs declared by the mix (fns without an
+        explicit objective are omitted) — feed to ``slo_aware``."""
+        return {p.fn: p.slo_p95_s for p in self.profiles
+                if p.slo_p95_s is not None}
 
     def requests(self) -> Iterator[Request]:
         arr_rng = random.Random(self.seed)

@@ -5,7 +5,6 @@ import sys
 # single real device; only launch/dryrun.py (its own process) forces 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 import pytest
 
 

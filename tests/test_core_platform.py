@@ -1,11 +1,10 @@
 """HyperFaaS core: router tree, simulator lifecycle, RQ-A policies, faults."""
 import random
 
-import numpy as np
 import pytest
 
 from repro.core.config_store import ConfigStore, ImageRegistry
-from repro.core.router import (LBNode, StateView, WorkerState, build_tree,
+from repro.core.router import (StateView, WorkerState, build_tree,
                                replicate)
 from repro.core.simulator import (Simulator, SyntheticServiceModel,
                                   poisson_load, summarize)
@@ -170,7 +169,6 @@ def test_failure_injection_and_recovery(store):
     sim.inject_failure("w0", at=2.0, recover_after=3.0)
     poisson_load(sim, fn="fn", rps=50, duration_s=10, seed=4)
     res = sim.run()
-    died = [r for r in res if not r.ok and r.error == "worker died"]
     late_ok = [r for r in res if r.ok and r.worker == "w0" and r.arrival_t > 6.0]
     assert late_ok, "w0 must serve again after recovery"
     assert summarize(res)["fail_rate"] < 0.2
@@ -214,6 +212,56 @@ def test_hedging_cuts_straggler_tail(store):
         poisson_load(sim, fn="fn", rps=40, duration_s=20, seed=4)
         return summarize(sim.run())["p99"]
     assert tail(True) < 0.6 * tail(False)
+
+
+def test_explicit_zero_cold_start_is_instant(store):
+    """ISSUE-3 regression: `cold_start_s=0.0` was falsy, so the seed's
+    `cfg.cold_start_s or default` silently replaced an explicitly
+    configured instant start with the 0.25 s default. Only an *unset*
+    (None) cold start may fall back to the platform default."""
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=1,
+                             cold_start_s=0.0))
+    sim = _sim(store, workers=1)
+    sim.submit(Request(fn="fn", arrival_t=1.0))
+    res = sim.run()
+    assert res[0].ok
+    # instant start: service began at arrival (no cold-start delay) even
+    # though the instance was created cold for this very request
+    assert res[0].start_t == pytest.approx(1.0 + sim.hop_s * 2)
+    # unset cold start still pays the default
+    store.put(FunctionConfig(name="fn2", arch="tiny_lm", concurrency=1))
+    sim2 = _sim(store, workers=1)
+    sim2.submit(Request(fn="fn2", arrival_t=1.0))
+    res2 = sim2.run()
+    assert res2[0].start_t >= 1.0 + sim2.cold_default
+
+
+def test_idle_check_on_draining_worker_is_noop(store):
+    """A worker parked in `_draining` (branch removed with work in
+    flight) must never reap instances through a queued idle_check — it
+    only exists to finish its in-flight requests (pinned behaviour)."""
+    from repro.autoscale import build_pool
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=1,
+                             cold_start_s=0.05, idle_timeout_s=0.5))
+    sim = Simulator(build_pool(2, 2), store, SyntheticServiceModel(seed=2),
+                    seed=5)
+    n = poisson_load(sim, fn="fn", rps=200, duration_s=2.0, seed=4)
+    sim.run(until=1.0)
+    gone = sim.tree.children[0].name
+    gone_workers = sim.tree.children[0].all_workers()
+    sim.remove_branch(gone)
+    drained = {w: sim._draining[w] for w in gone_workers
+               if w in sim._draining}
+    assert drained, "test must catch a worker mid-drain"
+    counts = {w: dw.total_instances for w, dw in drained.items()}
+    res = sim.run()
+    assert len(res) == n
+    for w, dw in drained.items():
+        # queued idle_checks fired while draining: silently no-op'ed —
+        # instance sets unchanged, only busy counts went to zero
+        assert dw.total_instances == counts[w]
+        assert dw.inflight() == 0
+    assert not sim._draining                # retired once in-flight drained
 
 
 def test_idle_instances_reaped(store):

@@ -1,6 +1,5 @@
 """Data pipeline: determinism, dp sharding, prefetch, memmap."""
 import numpy as np
-import pytest
 
 from repro.data.pipeline import DataConfig, Prefetcher, TokenStream
 

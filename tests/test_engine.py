@@ -37,7 +37,7 @@ def test_batched_requests_complete(engine):
 def test_cold_then_warm(engine):
     r1 = Request(fn="gen", arrival_t=0.0, size=8)
     engine.submit(r1)
-    res1 = engine.run()
+    engine.run()
     r2 = Request(fn="gen", arrival_t=0.0, size=8)
     engine.submit(r2)
     res2 = engine.run()

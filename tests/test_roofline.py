@@ -1,7 +1,6 @@
 """Roofline analyzer: HLO collective parsing, ring factors, term math."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import SHAPES, get_config

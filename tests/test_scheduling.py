@@ -1,0 +1,271 @@
+"""Per-function scheduling core: index units + byte-identity regression.
+
+The ISSUE-3 refactor replaced the flat worker queue / instance lists with
+``repro.core.scheduling`` (per-function FIFO queues merged by global
+arrival order, replica sets, iid index, deadline heap). The contract is
+that *semantics did not move*: the digests pinned below were produced by
+the pre-refactor flat-scan simulator and must keep matching the indexed
+one — across timeouts, hedging, unlimited concurrency, mixed tenants, a
+queue_len-sensitive service model, and a fully autoscaled run.
+"""
+import hashlib
+
+import pytest
+
+from repro.core.config_store import ConfigStore
+from repro.core.router import build_tree
+from repro.core.scheduling import FnQueues, FunctionReplicaSet, Instance
+from repro.core.simulator import Simulator, SyntheticServiceModel
+from repro.core.types import FunctionConfig, Request
+from repro.workloads import build_scenario, install_demo_configs
+
+
+# --------------------------------------------------------------- FnQueues
+def _req(fn, t, rid):
+    return Request(fn=fn, arrival_t=t, rid=rid)
+
+
+def test_fnqueues_preserves_global_arrival_order():
+    q = FnQueues()
+    reqs = [_req("a", 0.0, 0), _req("b", 0.1, 1), _req("a", 0.2, 2),
+            _req("c", 0.3, 3), _req("b", 0.4, 4)]
+    for r in reqs:
+        q.push(r, timeout_s=10.0)
+    assert len(q) == 5
+    assert q.depth("a") == 2 and q.depth("b") == 2 and q.depth("c") == 1
+    assert [r.rid for r in q] == [0, 1, 2, 3, 4]
+    assert sorted(q.active_fns()) == ["a", "b", "c"]
+
+
+def test_fnqueues_scan_pop_restore_cycle():
+    q = FnQueues()
+    for i in range(4):
+        q.push(_req("a", 0.1 * i, i), timeout_s=10.0)
+    head = q.scan_head("a")
+    assert head.rid == 0
+    q.pop_head("a")
+    q.mark_served(head)                  # rid 0 leaves the queue
+    second = q.scan_head("a")
+    q.pop_head("a")
+    q.restore("a", [second])             # rid 1 processed but kept
+    assert len(q) == 3
+    assert [r.rid for r in q] == [1, 2, 3]
+
+
+def test_fnqueues_expiry_matches_flat_scan_semantics():
+    q = FnQueues()
+    q.push(_req("a", 0.0, 0), timeout_s=1.0)
+    q.push(_req("b", 0.5, 1), timeout_s=1.0)
+    q.push(_req("a", 2.0, 2), timeout_s=1.0)
+    assert not q.has_expired(0.9)
+    assert q.pop_expired(0.9) == []
+    # strict '>': a request exactly at its deadline is not yet expired
+    assert q.pop_expired(1.0) == []
+    expired = q.pop_expired(1.6)
+    assert [r.rid for r in expired] == [0, 1]    # arrival order, both fns
+    assert len(q) == 1 and q.depth("a") == 1
+    assert [r.rid for r in q] == [2]
+
+
+def test_fnqueues_drain_all_in_arrival_order():
+    q = FnQueues()
+    for i, fn in enumerate(["x", "y", "x", "z"]):
+        q.push(_req(fn, 0.1 * i, i), timeout_s=5.0)
+    drained = q.drain_all()
+    assert [r.rid for r in drained] == [0, 1, 2, 3]
+    assert len(q) == 0 and q.pop_expired(99.0) == []
+
+
+# ------------------------------------------------------ FunctionReplicaSet
+def test_replica_set_pick_packs_densest_ready_first():
+    rs = FunctionReplicaSet("fn")
+    a = Instance(iid="i0", fn="fn", slots=4, busy=1, ready_t=0.0)
+    b = Instance(iid="i1", fn="fn", slots=4, busy=3, ready_t=0.0)
+    warm = Instance(iid="i2", fn="fn", slots=4, busy=0, ready_t=5.0)
+    rs.instances += [a, b, warm]
+    assert rs.pick(now=1.0) is b          # densest ready wins
+    b.busy = 4
+    assert rs.pick(now=1.0) is a          # full instance skipped
+    assert rs.pick(now=6.0) in (a, warm)  # warm becomes eligible later
+
+
+def test_replica_set_warming_and_free_slot_accounting():
+    rs = FunctionReplicaSet("fn")
+    rs.instances.append(Instance(iid="i0", fn="fn", slots=2, busy=1,
+                                 ready_t=0.0))
+    rs.instances.append(Instance(iid="i1", fn="fn", slots=3, busy=0,
+                                 ready_t=4.0))
+    assert rs.ready_free_slots(now=1.0) == 1
+    assert rs.warming_free(now=1.0) == 3
+    assert rs.next_ready_after(now=1.0) == 4.0
+    assert rs.next_ready_after(now=5.0) is None
+    assert rs.inflight() == 1
+    assert rs.idle_ready(now=1.0) is None
+    assert rs.idle_ready(now=5.0) is rs.instances[1]
+
+
+# ----------------------------------------- byte-identity vs the flat scan
+class QueueLenModel:
+    """Deterministic model that *uses* queue_len — catches any drift in
+    the queue-length snapshot the dispatch scan hands to sample()."""
+
+    def __init__(self, seed=0):
+        import random
+        self.rng = random.Random(seed)
+
+    def sample(self, cfg, *, batch_size, queue_len, prompt, cold, fn_cost):
+        base = 0.004 + 0.0001 * (prompt + cfg.gen_tokens)
+        base *= 1.0 + 0.01 * queue_len + 0.1 * max(batch_size - 1, 0)
+        base *= self.rng.lognormvariate(0.0, 0.05)
+        return base, self.rng.random() >= 0.001
+
+
+def _digest(sim):
+    h = hashlib.sha256()
+    for r in sim.results:
+        h.update(repr((r.rid, r.fn, r.ok, r.arrival_t, r.start_t, r.finish_t,
+                       r.cold_start, r.worker, r.instance, r.error)).encode())
+    for t in sim.telemetry:
+        h.update(repr((t.fn, t.t, t.queue_len, t.inflight, t.batch_size,
+                       t.cold, t.latency, t.ok)).encode())
+    return h.hexdigest()[:16]
+
+
+def _scenario_sim(scenario, model, *, workers=8, sim_kw=None, cfg_over=None,
+                  **over):
+    wl = build_scenario(scenario, **over)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    if cfg_over:
+        for fn in wl.fns():
+            c = store.get(fn)
+            store.put(FunctionConfig(**{**c.__dict__, **cfg_over}))
+    sim = Simulator(build_tree(workers, fanout=4), store, model,
+                    seed=7, **(sim_kw or {}))
+    sim.load(wl)
+    sim.run()
+    return sim
+
+
+# digests recorded from the pre-refactor flat-scan simulator (seed PR 2
+# tree) on the exact configurations below; the indexed scheduling core
+# must not move a single byte of the result/telemetry stream
+GOLDEN = {
+    "steady": "90ac57f36c579d36",
+    "multi_tenant": "ec5034f85267151c",
+    "timeouts": "f76ce8e2854a36ad",
+    "hedged": "e213486cf8767c28",
+    "unlimited": "080aa05e2b950234",
+    "queue_len_model": "1b2f33ae54ee62d1",
+}
+
+CASES = {
+    "steady": lambda: _scenario_sim(
+        "steady", SyntheticServiceModel(seed=2), rps=300.0, duration_s=8.0,
+        seed=3),
+    "multi_tenant": lambda: _scenario_sim(
+        "multi_tenant", SyntheticServiceModel(seed=2), rps=400.0,
+        duration_s=8.0, seed=3),
+    "timeouts": lambda: _scenario_sim(
+        "flash_crowd", SyntheticServiceModel(seed=2), duration_s=8.0, seed=3,
+        burst_rps=2000.0, workers=4,
+        cfg_over=dict(timeout_s=0.4, max_instances_per_worker=2)),
+    "hedged": lambda: _scenario_sim(
+        "steady", SyntheticServiceModel(seed=2), rps=150.0, duration_s=8.0,
+        seed=3, sim_kw=dict(hedge_after_s=0.05)),
+    "unlimited": lambda: _scenario_sim(
+        "multi_tenant", SyntheticServiceModel(seed=2), rps=400.0,
+        duration_s=8.0, seed=3, cfg_over=dict(concurrency=0)),
+    "queue_len_model": lambda: _scenario_sim(
+        "multi_tenant", QueueLenModel(seed=4), rps=500.0, duration_s=8.0,
+        seed=3, workers=4),
+}
+
+
+@pytest.mark.parametrize("case", sorted(GOLDEN))
+def test_results_byte_identical_to_flat_scan(case):
+    assert _digest(CASES[case]()) == GOLDEN[case]
+
+
+@pytest.mark.slow
+def test_autoscaled_run_byte_identical_to_flat_scan():
+    """Full control loop (grow/shrink/prewarm/reroute) over the indexed
+    core still reproduces the flat-scan result stream."""
+    from repro.autoscale import Autoscaler, build_pool
+    wl = build_scenario("flash_crowd", duration_s=20.0, seed=3, base_rps=12.0,
+                        burst_rps=1000.0, mean_burst_s=2.0, mean_calm_s=10.0)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_pool(1, 2), store, SyntheticServiceModel(seed=2),
+                    seed=7, worker_capacity_slots=1)
+    scaler = Autoscaler("reactive", interval_s=0.25, window_s=2.0,
+                        min_replicas=1, max_replicas=8, workers_per_replica=2,
+                        cooldown_s=2.0)
+    sim.attach_autoscaler(scaler)
+    sim.load(wl)
+    sim.run()
+    assert _digest(sim) == "12db0fa01285116e"
+
+
+# ------------------------------------------------- index-consistency paths
+@pytest.fixture
+def store():
+    s = ConfigStore()
+    s.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=2,
+                         cold_start_s=0.05, idle_timeout_s=2.0))
+    return s
+
+
+def test_iid_index_tracks_start_and_reap(store):
+    sim = Simulator(build_tree(2, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=5)
+    sim.submit(Request(fn="fn", arrival_t=0.0))
+    sim.run()
+    for w in sim.workers.values():
+        # idle timeout has long passed by end of run: everything reaped,
+        # and the iid index never leaks reaped instances
+        assert w.iid_index == {}
+        assert w.total_instances == 0
+        assert all(not rs.instances for rs in w.replica_sets.values())
+
+
+@pytest.mark.parametrize("merge_path", [False, True])
+def test_zero_cold_start_backlog_scan_does_not_strand(store, merge_path):
+    """Crash regression: a zero-cold instance started mid-scan is *ready*
+    capacity, not warming. Counting its free slots as warming sent a
+    later queued request down the wait-on-warming branch with no warming
+    instance to wait on (`next_ready_after -> None` -> TypeError in
+    _poke). Covers both the single-fn fast path and the multi-fn merge."""
+    store.put(FunctionConfig(name="blk", arch="tiny_lm", concurrency=1,
+                             cold_start_s=0.0, idle_timeout_s=0.4))
+    store.put(FunctionConfig(name="zc", arch="tiny_lm", concurrency=2,
+                             cold_start_s=0.0, max_instances_per_worker=1,
+                             idle_timeout_s=30.0, timeout_s=5.0))
+    store.put(FunctionConfig(name="other", arch="tiny_lm", concurrency=1,
+                             cold_start_s=0.5, timeout_s=5.0))
+    sim = Simulator(build_tree(1, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=5,
+                    worker_capacity_slots=1)
+    n = 0
+    sim.submit(Request(fn="blk", arrival_t=0.0)); n += 1
+    for i in range(3):      # backlog behind blk's capacity-pinned instance
+        sim.submit(Request(fn="zc", arrival_t=0.05 + 0.01 * i)); n += 1
+    if merge_path:          # second queued fn => multi-fn merge scan
+        sim.submit(Request(fn="other", arrival_t=0.1)); n += 1
+    # blk's instance idle-reaps ~0.45s; this arrival triggers the backlog
+    # scan that starts (and immediately saturates) the zero-cold replica
+    sim.submit(Request(fn="zc", arrival_t=1.0)); n += 1
+    res = sim.run()
+    assert len(res) == n
+    zc = [r for r in res if r.fn == "zc"]
+    assert all(r.ok for r in zc) and len(zc) == 4
+
+
+def test_worker_instances_view_matches_replica_sets(store):
+    sim = Simulator(build_tree(2, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=5)
+    w = next(iter(sim.workers.values()))
+    assert sim.prewarm(w.name, "fn")
+    assert [i.iid for i in w.instances["fn"]] == \
+        [i.iid for i in w.replica_sets["fn"].instances]
+    assert w.iid_index[w.instances["fn"][0].iid] is w.instances["fn"][0]

@@ -7,7 +7,6 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed.sharding import (DECODE_RULES, LONG_DECODE_RULES,
                                         PREFILL_RULES, TRAIN_RULES,
                                         resolve_spec)
-from repro.launch.mesh import make_local_mesh
 
 
 @pytest.fixture(scope="module")
