@@ -310,6 +310,33 @@ def bench_autoscaler_scenarios():
                  f"sim_wall_s={wall:.1f}{extra}")
 
 
+def bench_placement():
+    """Placement x routing matrix on the memory-skewed `multi_tenant`
+    scenario (heterogeneous per-tenant replica footprints, memory-capped
+    workers, slo_aware autoscaling). Reports per-function p95 vs SLO,
+    worker-seconds, and cold rate — the ISSUE-4 acceptance surface:
+    best_fit_memory + deadline_aware should meet every SLO at lower cost
+    than the first_fit + least_loaded baseline. The matrix cells live in
+    examples/placement_study.py (one definition for CI and the study)."""
+    from repro.core.simulator import summarize
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "examples"))
+    from placement_study import CELLS, run_cell
+    for placer, leaf, inner in CELLS:
+        t0 = time.perf_counter()
+        sim, scaler, results, per_fn = run_cell(placer, leaf, inner)
+        wall = time.perf_counter() - t0
+        s = summarize(results)
+        sm = scaler.summary()
+        parts = [f"{fn}={p95*1e3:.0f}/{slo*1e3:.0f}ms"
+                 for fn, (p95, slo) in per_fn.items()]
+        _row(f"placement_{placer}_{leaf}", 1e6 * s["p95"],
+             f"n={len(results)};fail={s['fail_rate']:.4f};"
+             f"cold={s['cold_rate']:.3f};"
+             f"worker_s={sm['worker_seconds']:.0f};"
+             f"fn_p95_vs_slo={','.join(parts)};sim_wall_s={wall:.1f}")
+
+
 def bench_sim_throughput():
     from repro.core.config_store import ConfigStore
     from repro.core.router import build_tree
@@ -353,7 +380,7 @@ def roofline_table():
 BENCHES = [bench_tree_scaling, bench_lb_policies, bench_concurrency,
            bench_emulation, bench_serving_engine, bench_kernels,
            bench_workload_scenarios, bench_autoscaler_scenarios,
-           bench_sim_throughput, roofline_table]
+           bench_placement, bench_sim_throughput, roofline_table]
 
 
 def main() -> None:

@@ -1,0 +1,93 @@
+"""Placement study: memory-aware bin packing x deadline-aware routing.
+
+On the memory-skewed `multi_tenant` scenario (chat 256 MB, embed 512 MB,
+batch 1536 MB replicas on 1792 MB workers) a batch replica monopolises a
+worker's memory, so *where* replicas start decides whether the other
+tenants can start at all. The study runs the placer x routing matrix
+under slo_aware autoscaling and reports per-tenant p95 vs SLO plus
+worker-seconds — showing how `best_fit_memory` + `deadline_aware`
+(branch-level ETA scoring, memory-blocked cold starts penalised) meets
+every SLO at lower cost than the paper-recipe `first_fit` +
+`least_loaded` baseline, which strands embed/batch traffic behind
+memory-full workers. It ends with a placement decision-log excerpt —
+byte-identical across same-seed runs (`tests/test_placement.py` pins
+the digests).
+
+Run:  PYTHONPATH=src python examples/placement_study.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.autoscale import Autoscaler, build_pool, get_autoscaler
+from repro.core.config_store import ConfigStore
+from repro.core.placement import list_placers
+from repro.core.simulator import Simulator, SyntheticServiceModel, summarize
+from repro.workloads import build_scenario, install_demo_configs
+
+# the ISSUE-4 acceptance surface; `benchmarks/run.py` (bench_placement)
+# imports CELLS/run_cell so the CI bench and this study can never drift
+CELLS = [
+    ("first_fit", "least_loaded", "random"),        # PR 3-style baseline
+    ("first_fit", "deadline_aware", "deadline_aware"),
+    ("best_fit_memory", "least_loaded", "random"),
+    ("best_fit_memory", "deadline_aware", "deadline_aware"),
+    ("spread", "deadline_aware", "deadline_aware"),
+]
+
+
+def run_cell(placer: str, leaf: str, inner: str, *, record=False):
+    """One matrix cell: memory-skewed multi_tenant under slo_aware
+    autoscaling. Returns (sim, scaler, results, per_fn {fn: (p95, slo)})."""
+    wl = build_scenario("multi_tenant", rps=60.0, duration_s=20.0, seed=3,
+                        memory_skew=True)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_pool(1, 2, leaf_policy=leaf, inner_policy=inner),
+                    store, SyntheticServiceModel(seed=2), seed=7,
+                    worker_capacity_slots=8, worker_memory_mb=1792,
+                    placer=placer, record_decisions=record)
+    pol = get_autoscaler("slo_aware", slo_p95_s=wl.slo_targets())
+    scaler = Autoscaler(pol, interval_s=0.25, window_s=2.0, min_replicas=1,
+                        max_replicas=8, workers_per_replica=2, cooldown_s=2.0,
+                        leaf_policy=leaf)
+    sim.attach_autoscaler(scaler)
+    sim.load(wl)
+    results = sim.run()
+    per_fn = {}
+    for fn, slo in sorted(wl.slo_targets().items()):
+        lat = np.array([r.latency for r in results if r.ok and r.fn == fn])
+        p95 = float(np.percentile(lat, 95)) if len(lat) else float("nan")
+        per_fn[fn] = (p95, slo)
+    return sim, scaler, results, per_fn
+
+
+def main():
+    print(f"registered placers: {', '.join(list_placers())}")
+    print("memory-skewed multi_tenant, 1792 MB workers, slo_aware "
+          "autoscaling (max 8x2 workers)\n")
+    excerpt = None
+    for placer, leaf, inner in CELLS:
+        record = (placer, leaf) == ("best_fit_memory", "deadline_aware")
+        sim, scaler, results, per_fn = run_cell(placer, leaf, inner,
+                                                record=record)
+        if record:
+            excerpt = sim
+        s = summarize(results)
+        met = all(p95 < slo for p95, slo in per_fn.values())
+        parts = [f"{fn}={p95:6.2f}s/{slo:.1f}s"
+                 for fn, (p95, slo) in per_fn.items()]
+        print(f"  {placer:>15s} + {leaf:<15s}: "
+              f"{'SLO MET ' if met else 'SLO MISS'} "
+              f"worker_s={scaler.worker_seconds:5.0f} "
+              f"fail={s['fail_rate']:.4f} cold={s['cold_rate']:.3f}  "
+              f"p95: {' '.join(parts)}")
+    print("\nplacement decision-log excerpt (best_fit_memory + "
+          "deadline_aware, byte-identical for the same seed):")
+    for line in excerpt.placement_records[:10]:
+        print(" ", line)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,8 @@ See README.md §"Autoscaling" for the extension guide."""
 from repro.autoscale.controller import (Autoscaler, ScalingDecision,
                                         build_pool)
 from repro.autoscale.metrics import (FnSample, LatencyEstimator,
-                                     MetricsSample, MetricsWindow)
+                                     MetricsSample, MetricsWindow,
+                                     ServiceEstimator)
 from repro.autoscale.policy import (AUTOSCALERS, AutoscalePolicy,
                                     PredictivePolicy, ReactivePolicy,
                                     SloAwarePolicy, StaticPolicy,
@@ -20,6 +21,7 @@ from repro.autoscale.replay import (ReplayPolicy, load_decision_log,
 __all__ = [
     "Autoscaler", "ScalingDecision", "build_pool",
     "FnSample", "LatencyEstimator", "MetricsSample", "MetricsWindow",
+    "ServiceEstimator",
     "AUTOSCALERS", "AutoscalePolicy", "StaticPolicy", "ReactivePolicy",
     "TargetConcurrencyPolicy", "PredictivePolicy", "SloAwarePolicy",
     "get_autoscaler", "list_autoscalers", "register_autoscaler",

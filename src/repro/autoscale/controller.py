@@ -232,33 +232,19 @@ class Autoscaler:
         return decision
 
     def _apply_fn_actions(self, sim, fn_deltas) -> None:
-        """Prewarm (+n) on the workers coldest in that fn, reap (-n) off
-        the warmest — deterministic worker order keeps replays exact."""
+        """Prewarm (+n) and reap (-n) through the simulator's placement
+        layer (``place_prewarm``/``place_reap``): the placer bin-packs
+        replica starts by memory and picks the reap victim over a
+        deterministic coldest/warmest-first candidate order, re-ranked
+        after every placed unit (so a multi-unit delta re-packs against
+        the updated footprints; for the ±1 deltas every built-in policy
+        emits this is exactly the pre-placement order)."""
         for fn, delta in fn_deltas:
-            if delta > 0:
-                order = sorted(
-                    (w for w in sim._worker_list if w in sim.workers),
-                    key=lambda n: (len(sim.workers[n].replica_sets.get(fn).instances)
-                                   if fn in sim.workers[n].replica_sets else 0,
-                                   sim.workers[n].total_instances, n))
-                done = 0
-                for name in order:
-                    if done >= delta:
-                        break
-                    if sim.prewarm(name, fn):
-                        done += 1
-            elif delta < 0:
-                order = sorted(
-                    (w for w in sim._worker_list if w in sim.workers),
-                    key=lambda n: (-(len(sim.workers[n].replica_sets.get(fn).instances)
-                                     if fn in sim.workers[n].replica_sets else 0),
-                                   n))
-                done = 0
-                for name in order:
-                    if done >= -delta:
-                        break
-                    if sim.reap(name, fn):
-                        done += 1
+            for _ in range(abs(delta)):
+                placed = (sim.place_prewarm(fn) if delta > 0
+                          else sim.place_reap(fn))
+                if placed is None:
+                    break
 
     def _grow(self, sim) -> None:
         bid = self._branch_seq

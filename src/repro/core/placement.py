@@ -1,0 +1,137 @@
+"""Pluggable replica-placement layer: bin-pack replica starts by memory.
+
+SeBS (Copik et al.) and the FaaS Benchmarking Framework both identify the
+per-function memory allocation as a dominant platform knob; this module
+makes it a first-class architectural axis of the testbed. Every worker
+carries an optional ``memory_mb`` capacity, every started replica charges
+its function's ``FunctionConfig.memory_mb`` against it, and a *placer*
+decides which worker hosts the next replica (and which worker gives one
+back on scale-down).
+
+A placer never mutates state. It ranks candidate workers; the simulator
+supplies the candidates in a deterministic preference order (coldest in
+the function for placement, warmest for reaping) and then attempts the
+actual start/stop in the placer's order, so two same-seed runs make
+byte-identical placement decisions.
+
+The worker objects a placer sees are duck-typed (the simulator's
+``_Worker``); a placer may read:
+
+- ``name``              stable worker id (the deterministic tiebreak)
+- ``mem_free_mb()``     free memory, ``inf`` when the worker is uncapped
+- ``fits(mem_mb)``      admission check against the memory capacity
+- ``fn_replicas(fn)``   live replicas of one function on this worker
+- ``total_instances``   live replicas across all functions
+
+Registering a custom placer mirrors the LB-policy and autoscaler
+registries::
+
+    @register_placer
+    class MyPlacer(Placer):
+        name = "my_placer"
+        def place_order(self, fn, memory_mb, workers):
+            return [w for w in workers if w.fits(memory_mb)]
+
+    sim = Simulator(tree, store, model, placer="my_placer",
+                    worker_memory_mb=4096)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence
+
+PLACERS: Dict[str, Callable[..., "Placer"]] = {}
+
+
+def register_placer(cls):
+    """Class decorator: add a Placer subclass to the registry."""
+    PLACERS[cls.name] = cls
+    return cls
+
+
+def get_placer(name: str, **params) -> "Placer":
+    """Construct a registered placer by name: the config/CLI hook."""
+    if name not in PLACERS:
+        raise KeyError(f"placer {name!r} not registered "
+                       f"(have: {sorted(PLACERS)})")
+    return PLACERS[name](**params)
+
+
+def list_placers() -> List[str]:
+    return sorted(PLACERS)
+
+
+class Placer:
+    """Base interface: rank candidate workers for one replica move.
+
+    ``workers`` arrives in the simulator's preference order (see module
+    docstring); a placer filters by fit and may re-rank. Python sorts are
+    stable, so a placer that sorts on a memory key degenerates to the
+    incoming order when every worker is uncapped — which is what keeps
+    unlimited-memory runs byte-identical to the pre-placement simulator.
+    """
+
+    name = "base"
+
+    def place_order(self, fn: str, memory_mb: float,
+                    workers: Sequence) -> List:
+        """Workers that can host one more ``memory_mb`` replica of ``fn``,
+        best host first."""
+        raise NotImplementedError
+
+    def reap_order(self, fn: str, workers: Sequence) -> List:
+        """Workers to take an idle replica of ``fn`` from, first choice
+        first. Default: the simulator's warmest-first preference order."""
+        return list(workers)
+
+
+@register_placer
+class FirstFitPlacer(Placer):
+    """Classic first-fit bin packing: take the first candidate with room.
+
+    With unlimited memory every candidate fits, so this is exactly the
+    pre-placement behaviour (pinned by the golden digests in
+    ``tests/test_placement.py``) — the safe default.
+    """
+
+    name = "first_fit"
+
+    def place_order(self, fn, memory_mb, workers):
+        return [w for w in workers if w.fits(memory_mb)]
+
+
+@register_placer
+class BestFitMemoryPlacer(Placer):
+    """Best-fit bin packing on memory: tightest surviving gap first.
+
+    Packing big-footprint replicas into the fullest worker that still
+    fits preserves large contiguous headroom elsewhere — the placement
+    that keeps a heterogeneous-memory mix schedulable where first-fit
+    fragments the fleet. Reaping is the mirror image: free memory on the
+    most pressured worker first.
+    """
+
+    name = "best_fit_memory"
+
+    def place_order(self, fn, memory_mb, workers):
+        return sorted((w for w in workers if w.fits(memory_mb)),
+                      key=lambda w: w.mem_free_mb())
+
+    def reap_order(self, fn, workers):
+        return sorted(workers, key=lambda w: w.mem_free_mb())
+
+
+@register_placer
+class SpreadPlacer(Placer):
+    """Availability-first: spread replicas of a function across workers.
+
+    Prefers the worker holding the fewest replicas of ``fn`` (then the
+    emptiest overall, then the most free memory) so one worker failure
+    takes out the smallest share of a function's warm capacity.
+    """
+
+    name = "spread"
+
+    def place_order(self, fn, memory_mb, workers):
+        return sorted((w for w in workers if w.fits(memory_mb)),
+                      key=lambda w: (w.fn_replicas(fn), w.total_instances,
+                                     -w.mem_free_mb()))

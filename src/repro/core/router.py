@@ -33,6 +33,9 @@ class WorkerState:
     # slots by fn — what lets least-loaded routing become warm-aware
     fn_queue: Mapping[str, int] = field(default_factory=dict)
     fn_free_slots: Mapping[str, int] = field(default_factory=dict)
+    # free replica memory on the worker (inf when uncapped) — the
+    # placement layer's routing-visible signal
+    mem_free_mb: float = float("inf")
 
     @property
     def load(self) -> float:
@@ -46,11 +49,35 @@ class WorkerState:
 class StateView:
     """Worker-state source with optional staleness (simulated gRPC lag)."""
 
+    #: fallback per-request service estimate before any completion is seen
+    DEFAULT_SERVICE_S = 0.05
+
     def __init__(self, staleness_s: float = 0.0):
         self.staleness_s = staleness_s
         self._now: Dict[str, WorkerState] = {}
         self._stale: Dict[str, WorkerState] = {}
         self._stale_t: float = -1e30
+        # windowed per-fn service-time source (repro.autoscale.metrics.
+        # ServiceEstimator); attached by the simulator only when the tree
+        # routes with a deadline-aware policy
+        self.estimator = None
+        self.cold_start_est_s = 0.25   # routing-visible cold-start guess
+        # per-function replica footprint (filled by the simulator from the
+        # config store): lets deadline routing see that a cold start on a
+        # memory-full worker cannot even begin
+        self.fn_memory: Dict[str, float] = {}
+        # fallback for names with no stored row — the simulator resolves
+        # *inner* LB-node names to lazily-aggregated subtree states, so
+        # deadline routing stays informed above the leaf level in trees
+        # deeper than two levels
+        self.node_resolver = None
+
+    def service_est(self, fn: str) -> float:
+        """Expected per-request service time for one function (windowed
+        observation when an estimator is attached, a flat prior before)."""
+        if self.estimator is None:
+            return self.DEFAULT_SERVICE_S
+        return self.estimator.estimate(fn)
 
     def update(self, state: WorkerState, t: float = 0.0):
         self._now[state.worker] = state
@@ -61,6 +88,8 @@ class StateView:
     def get(self, worker: str, t: float = 0.0) -> WorkerState:
         src = self._now if self.staleness_s == 0 else self._stale
         state = src.get(worker)
+        if state is None and self.node_resolver is not None:
+            state = self.node_resolver(worker, t)
         # build the empty default lazily: get() runs once per candidate
         # worker on every routing decision
         return state if state is not None else WorkerState(worker)
@@ -121,6 +150,55 @@ def warm_least_loaded_policy(req, workers, view, rng, t):
                                      rng.random()))[0]
 
 
+# ETA surcharge for a cold start that cannot begin (no replica memory
+# free on the worker): finite so a fully-blocked fleet still ranks
+# deterministically by backlog, huge so any startable worker wins
+MEM_BLOCKED_PENALTY_S = 1e6
+
+
+def deadline_aware_policy(req, workers, view, rng, t):
+    """Route to the branch most likely to meet the request's deadline.
+
+    Predicted completion time on a worker combines warm-replica
+    availability with the function's queued backlog priced at the
+    windowed per-request service estimate (``view.service_est``, fed by
+    ``repro.autoscale.metrics.ServiceEstimator``):
+
+    - free warm slots: own service + backlog draining across those slots
+    - warm but saturated: wait a full service turn per queued request
+    - no warm replica: the same, plus one cold start
+
+    A cold start on a worker without free replica memory for the
+    function cannot even begin until something idles out there — those
+    workers take a large ETA penalty instead of masquerading as lightly
+    loaded (idle big-footprint replicas otherwise *attract* traffic
+    they can never serve).
+
+    The ETA is scored against the request's ``slo_p95_s``-derived
+    absolute deadline: workers predicted to *meet* it beat workers
+    predicted to blow it, then lower ETA wins, then lower worker-wide
+    load. Requests with no deadline degrade to pure ETA routing."""
+    svc = view.service_est(req.fn)
+    need_mb = view.fn_memory.get(req.fn, 0.0)
+    slack = (req.deadline_t - t if req.deadline_t is not None
+             else float("inf"))
+    scored = []
+    for w in workers:
+        ws = view.get(w, t)
+        free = ws.fn_free_slots.get(req.fn, 0)
+        depth = ws.fn_depth(req.fn)
+        if free > 0:
+            eta = svc * (1.0 + depth / free)
+        else:
+            eta = svc * (depth + 2.0)
+            if req.fn not in ws.warm_fns:
+                eta += view.cold_start_est_s
+                if ws.mem_free_mb < need_mb:
+                    eta += MEM_BLOCKED_PENALTY_S
+        scored.append((eta > slack, eta, ws.load, rng.random(), w))
+    return min(scored)[-1]
+
+
 POLICIES: Dict[str, Callable] = {
     "random": lambda: random_policy,
     "round_robin": round_robin_policy,
@@ -129,6 +207,7 @@ POLICIES: Dict[str, Callable] = {
     "pow2": lambda: pow2_policy,
     "warm_affinity": lambda: warm_affinity_policy,
     "warm_least_loaded": lambda: warm_least_loaded_policy,
+    "deadline_aware": lambda: deadline_aware_policy,
 }
 
 STATELESS = {"random", "round_robin", "hash"}

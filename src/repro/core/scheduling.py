@@ -45,6 +45,7 @@ class Instance:
     busy: int = 0
     last_used: float = 0.0
     ready_t: float = 0.0       # cold start completes
+    memory_mb: float = 0.0     # footprint charged against worker capacity
 
     def has_free_slot(self) -> bool:
         return self.busy < self.slots if self.slots > 0 else True
@@ -59,17 +60,29 @@ class FunctionReplicaSet:
     Keeps the instance list plus the per-function reads the dispatch hot
     path needs: densest ready pick, warming free slots, next ready time.
     Instance counts are bounded by the worker's capacity, so these scans
-    are O(replicas-of-one-fn), never O(worker).
+    are O(replicas-of-one-fn), never O(worker). The set also carries the
+    function's aggregate memory footprint (``mem_mb``), maintained
+    incrementally by :meth:`add`/:meth:`discard` so the placement layer
+    never rescans instance lists to account memory.
     """
 
-    __slots__ = ("fn", "instances")
+    __slots__ = ("fn", "instances", "mem_mb")
 
     def __init__(self, fn: str):
         self.fn = fn
         self.instances: List[Instance] = []
+        self.mem_mb = 0.0          # sum of live replicas' memory_mb
 
     def __len__(self) -> int:
         return len(self.instances)
+
+    def add(self, inst: Instance) -> None:
+        self.instances.append(inst)
+        self.mem_mb += inst.memory_mb
+
+    def discard(self, inst: Instance) -> None:
+        self.instances.remove(inst)
+        self.mem_mb -= inst.memory_mb
 
     def pick(self, now: float) -> Optional[Instance]:
         """Ready instance with a free slot, packing densest first."""

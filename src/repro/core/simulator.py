@@ -19,6 +19,7 @@ import random
 from typing import Dict, List, Optional
 
 from repro.core.config_store import ConfigStore
+from repro.core.placement import Placer, get_placer
 from repro.core.router import LBNode, StateView, WorkerState
 from repro.core.scheduling import (UNLIMITED_SLOTS, FnQueues,
                                    FunctionReplicaSet, Instance)
@@ -54,12 +55,21 @@ class SyntheticServiceModel:
 
 # LB policies that read the per-function WorkerState layer; the simulator
 # only pays for building those snapshots when the tree routes with one
-_FN_STATE_POLICIES = frozenset({"warm_least_loaded"})
+_FN_STATE_POLICIES = frozenset({"warm_least_loaded", "deadline_aware"})
+
+# LB policies that additionally price backlogs with the windowed service
+# estimator; the simulator only feeds it when the tree routes with one
+_DEADLINE_POLICIES = frozenset({"deadline_aware"})
 
 
 def _tree_uses_fn_state(node) -> bool:
     return (node.policy_name in _FN_STATE_POLICIES
             or any(_tree_uses_fn_state(c) for c in node.children))
+
+
+def _tree_uses_deadline(node) -> bool:
+    return (node.policy_name in _DEADLINE_POLICIES
+            or any(_tree_uses_deadline(c) for c in node.children))
 
 # Re-exported for callers that patched/inspected the old private name.
 _Instance = Instance
@@ -67,17 +77,23 @@ _Instance = Instance
 
 class _Worker:
     """One node: per-function replica sets + per-function FIFO queues,
-    indexed so every hot-path read is O(affected function)."""
+    indexed so every hot-path read is O(affected function). Memory and
+    slot totals are tracked incrementally (never recomputed by scanning
+    instances) so the placement layer and ``slots_total`` are O(1)."""
 
-    def __init__(self, name: str, capacity_slots: int = 16):
+    def __init__(self, name: str, capacity_slots: int = 16,
+                 memory_mb: Optional[float] = None):
         self.name = name
         self.capacity_slots = capacity_slots   # hardware concurrency of node
+        self.memory_mb = memory_mb             # replica memory cap (None=inf)
+        self.memory_used_mb = 0.0              # incremental footprint
         self.slowdown = 1.0                    # straggler factor
         self.healthy = True
         self.replica_sets: Dict[str, FunctionReplicaSet] = {}
         self.iid_index: Dict[str, Instance] = {}   # iid -> live instance
         self.total_instances = 0
         self._inflight = 0                 # incremental busy-slot count
+        self._slots_total = 0              # incremental slots_total counter
         self.queue = FnQueues()
         self.busy_time = 0.0
         self.cold_starts = 0
@@ -90,24 +106,61 @@ class _Worker:
         return {fn: rs.instances for fn, rs in self.replica_sets.items()
                 if rs.instances}
 
+    @staticmethod
+    def _slot_contrib(inst: Instance) -> int:
+        # an unlimited-concurrency instance (slots == 0) counts its live
+        # occupancy (min 1) — matches the old flat recomputation exactly
+        return inst.slots if inst.slots > 0 else max(inst.busy, 1)
+
     def add_instance(self, inst: Instance) -> None:
         rs = self.replica_sets.get(inst.fn)
         if rs is None:
             rs = self.replica_sets[inst.fn] = FunctionReplicaSet(inst.fn)
-        rs.instances.append(inst)
+        rs.add(inst)
         self.iid_index[inst.iid] = inst
         self.total_instances += 1
+        self.memory_used_mb += inst.memory_mb
+        self._slots_total += self._slot_contrib(inst)
 
     def remove_instance(self, inst: Instance) -> None:
-        self.replica_sets[inst.fn].instances.remove(inst)
+        self.replica_sets[inst.fn].discard(inst)
         self.iid_index.pop(inst.iid, None)
         self.total_instances -= 1
+        self.memory_used_mb -= inst.memory_mb
+        self._slots_total -= self._slot_contrib(inst)
 
     def clear_instances(self) -> None:
         self.replica_sets.clear()
         self.iid_index.clear()
         self.total_instances = 0
+        self.memory_used_mb = 0.0
         self._inflight = 0
+        self._slots_total = 0
+
+    def note_busy(self, inst: Instance, delta: int) -> None:
+        """Move an instance's busy count, keeping ``_slots_total`` exact:
+        a slots==0 instance contributes ``max(busy, 1)``, so its share
+        shifts as occupancy changes."""
+        self._inflight += delta
+        if inst.slots > 0:
+            inst.busy += delta
+            return
+        before = max(inst.busy, 1)
+        inst.busy += delta
+        self._slots_total += max(inst.busy, 1) - before
+
+    def fits(self, memory_mb: float) -> bool:
+        """Memory admission for one more ``memory_mb`` replica."""
+        return (self.memory_mb is None
+                or self.memory_used_mb + memory_mb <= self.memory_mb + 1e-9)
+
+    def mem_free_mb(self) -> float:
+        return (float("inf") if self.memory_mb is None
+                else self.memory_mb - self.memory_used_mb)
+
+    def fn_replicas(self, fn: str) -> int:
+        rs = self.replica_sets.get(fn)
+        return len(rs.instances) if rs is not None else 0
 
     def warm_fns(self) -> frozenset:
         return frozenset(fn for fn, rs in self.replica_sets.items()
@@ -117,8 +170,7 @@ class _Worker:
         return self._inflight
 
     def slots_total(self) -> int:
-        return sum((i.slots if i.slots > 0 else max(i.busy, 1))
-                   for i in self.iid_index.values()) or 1
+        return self._slots_total or 1
 
     def fn_free_slots(self, now: float) -> Dict[str, int]:
         """Per-function immediately-usable warm slots (router signal)."""
@@ -132,7 +184,10 @@ class Simulator:
                  hedge_after_s: Optional[float] = None,
                  cold_start_default_s: float = 0.25,
                  network_hop_s: float = 0.0005,
-                 worker_capacity_slots: int = 16):
+                 worker_capacity_slots: int = 16,
+                 worker_memory_mb: Optional[float] = None,
+                 placer="first_fit",
+                 record_decisions: bool = False):
         self.tree = tree
         self.store = store
         self.model = service_model
@@ -142,12 +197,33 @@ class Simulator:
         self.cold_default = cold_start_default_s
         self.hop_s = network_hop_s
         self.worker_capacity_slots = worker_capacity_slots
+        # None => unlimited replica memory per worker: every placement
+        # admission passes and behaviour is byte-identical to the
+        # pre-placement simulator (pinned in tests/test_placement.py)
+        self.worker_memory_mb = worker_memory_mb
+        self.placer: Placer = (get_placer(placer) if isinstance(placer, str)
+                               else placer)
+        self._record = record_decisions
+        self.placement_records: List[str] = []   # start/reap/idle events
+        self.routing_records: List[str] = []     # arrival/reroute choices
         self.workers: Dict[str, _Worker] = {
-            w: _Worker(w, capacity_slots=worker_capacity_slots)
+            w: _Worker(w, capacity_slots=worker_capacity_slots,
+                       memory_mb=worker_memory_mb)
             for w in tree.all_workers()}
         self._worker_list = list(self.workers)   # cache (rebuilt on add/remove)
         self._healthy_count = len(self.workers)  # incremental: O(1) arrivals
         self._fn_view_needed = _tree_uses_fn_state(tree)
+        self._branch_view_needed = False  # aggregate leaf rows for inner LBs
+        self._leaf_members: Dict[str, List[str]] = {}
+        self._leaf_of: Dict[str, str] = {}
+        self._node_workers: Dict[str, List[str]] = {}   # inner-node subtrees
+        self._worker_ancestors: Dict[str, List[str]] = {}
+        self._node_dirty: set = set()
+        self._node_cache: Dict[str, WorkerState] = {}
+        self._node_cache_stale_t = -1e30   # stale-snapshot rotation stamp
+        self._rebuild_leaf_index()
+        if _tree_uses_deadline(tree):
+            self._enable_service_est()
         self._draining: Dict[str, _Worker] = {}  # removed, in-flight finishing
         self._events: list = []
         self._pending_real = 0       # events besides autoscale_tick in queue
@@ -184,11 +260,15 @@ class Simulator:
         self.tree.add_branch(node)
         for w in node.all_workers():
             self.workers[w] = _Worker(
-                w, capacity_slots=self.worker_capacity_slots)
+                w, capacity_slots=self.worker_capacity_slots,
+                memory_mb=self.worker_memory_mb)
         self._worker_list = list(self.workers)
         self._recount_healthy()
+        self._rebuild_leaf_index()
         self._fn_view_needed = (self._fn_view_needed
                                 or _tree_uses_fn_state(node))
+        if _tree_uses_deadline(node):
+            self._enable_service_est()
 
     def remove_branch(self, name: str):
         """Remove a branch *safely*: queued requests on its workers are
@@ -212,6 +292,7 @@ class Simulator:
                 if w.inflight() > 0:
                     self._draining[wname] = w
         self._recount_healthy()
+        self._rebuild_leaf_index()
 
     def _recount_healthy(self):
         self._healthy_count = sum(
@@ -254,11 +335,185 @@ class Simulator:
         if inst is None:
             return False
         w.remove_instance(inst)
+        if self._record:
+            self._log_placement("reap", w, fn)
         if len(w.queue) > 0:       # freed capacity may unblock other fns
             self._dispatch(w)
         else:
             self._refresh_view(w)
         return True
+
+    def _enable_service_est(self):
+        """Attach the windowed service-time estimator deadline-aware
+        routing prices backlogs with (idempotent; lazy import keeps the
+        core layer free of a hard autoscale dependency). Deadline routing
+        is the one stateful policy meant for *inner* LB nodes too — the
+        paper's recipe otherwise scatters across branches statelessly —
+        so it also turns on aggregated per-branch state rows."""
+        if self.view.estimator is None:
+            from repro.autoscale.metrics import ServiceEstimator
+            self.view.estimator = ServiceEstimator()
+        self.view.cold_start_est_s = self.cold_default
+        self.view.node_resolver = self._resolve_node_state
+        self._branch_view_needed = True
+
+    def _rebuild_leaf_index(self):
+        """Worker -> leaf / inner-ancestor maps for branch-level state
+        rows (leaf rows are refreshed eagerly; inner-node rows resolve
+        lazily through ``_resolve_node_state``)."""
+        self._leaf_members = {}
+        self._leaf_of = {}
+        self._node_workers = {}
+        ancestors: Dict[str, set] = {}
+
+        def walk(node, path):
+            if node.is_leaf:
+                self._leaf_members[node.name] = list(node.workers)
+                for w in node.workers:
+                    self._leaf_of[w] = node.name
+                    ancestors.setdefault(w, set()).update(path)
+                return
+            self._node_workers[node.name] = node.all_workers()
+            for c in node.children:
+                walk(c, path + [node.name])
+        walk(self.tree, [])
+        self._worker_ancestors = {w: sorted(a) for w, a in ancestors.items()}
+        self._node_dirty = set(self._node_workers)
+        self._node_cache = {}
+
+    def _aggregate_state(self, name: str, members) -> WorkerState:
+        """One aggregated WorkerState row over a set of *live* workers so
+        stateful branch-level policies (deadline_aware) can score whole
+        leaf branches: sums for queue/inflight/capacity, unions for warm
+        sets, and the *best* free memory (a cold start needs one worker
+        that fits, not average headroom). Inner-node rows use the
+        row-based (staleness-respecting) variant in
+        ``_resolve_node_state``."""
+        q = infl = cap = 0
+        qd: Dict[str, int] = {}
+        fs: Dict[str, int] = {}
+        warm: set = set()
+        healthy = False
+        mem = 0.0
+        for wname in members:
+            w = self.workers.get(wname)
+            if w is None:
+                continue
+            q += len(w.queue)
+            infl += w.inflight()
+            cap += w.slots_total()
+            if not w.healthy:
+                continue
+            healthy = True
+            mem = max(mem, w.mem_free_mb())
+            warm.update(w.warm_fns())
+            for fn, n in w.queue.depths().items():
+                qd[fn] = qd.get(fn, 0) + n
+            for fn, n in w.fn_free_slots(self.now).items():
+                fs[fn] = fs.get(fn, 0) + n
+        return WorkerState(
+            worker=name, queue_len=q, inflight=infl, capacity=cap,
+            warm_fns=frozenset(warm), healthy=healthy, fn_queue=qd,
+            fn_free_slots=fs, mem_free_mb=mem)
+
+    def _refresh_branch_view(self, leaf: str):
+        self.view.update(
+            self._aggregate_state(leaf, self._leaf_members.get(leaf, ())),
+            self.now)
+
+    def _resolve_node_state(self, name: str, t: float):
+        """StateView fallback for *inner* (non-leaf) node names: deeper
+        trees route deadline_aware above the leaf level too, and those
+        nodes have no eagerly-refreshed row. Aggregates the members'
+        per-worker *view rows* — not live workers — so upper-level
+        scoring sees exactly the staleness the StateView models; cached
+        until a member refreshes (dirty-tracked in ``_refresh_view``) or
+        the stale snapshot rotates. 2-level trees, whose scored children
+        are all leaves, never pay for any of this."""
+        members = self._node_workers.get(name)
+        if members is None:
+            return None
+        if (self.view.staleness_s > 0
+                and self._node_cache_stale_t != self.view._stale_t):
+            self._node_cache.clear()        # stale snapshot rotated
+            self._node_cache_stale_t = self.view._stale_t
+        if name in self._node_dirty or name not in self._node_cache:
+            q = infl = cap = 0
+            qd: Dict[str, int] = {}
+            fs: Dict[str, int] = {}
+            warm: set = set()
+            healthy = False
+            mem = 0.0
+            for wname in members:
+                ws = self.view.get(wname, t)   # staleness-respecting row
+                q += ws.queue_len
+                infl += ws.inflight
+                cap += ws.capacity
+                if not ws.healthy:
+                    continue
+                healthy = True
+                mem = max(mem, ws.mem_free_mb)
+                warm.update(ws.warm_fns)
+                for fn, n in ws.fn_queue.items():
+                    qd[fn] = qd.get(fn, 0) + n
+                for fn, n in ws.fn_free_slots.items():
+                    fs[fn] = fs.get(fn, 0) + n
+            self._node_cache[name] = WorkerState(
+                worker=name, queue_len=q, inflight=infl, capacity=cap,
+                warm_fns=frozenset(warm), healthy=healthy, fn_queue=qd,
+                fn_free_slots=fs, mem_free_mb=mem)
+            self._node_dirty.discard(name)
+        return self._node_cache[name]
+
+    # ------------------------------------------------------------ placement
+    def _log_placement(self, kind: str, w: _Worker, fn: str) -> None:
+        cap = "inf" if w.memory_mb is None else f"{w.memory_mb:.0f}"
+        self.placement_records.append(
+            f"t={self.now:.6f} {kind} fn={fn} worker={w.name} "
+            f"mem={w.memory_used_mb:.0f}/{cap} inst={w.total_instances}")
+
+    def placement_log(self) -> str:
+        """Byte-stable placement decision log (``record_decisions=True``):
+        one line per replica start/reap/idle-stop, in event order."""
+        return "\n".join(self.placement_records)
+
+    def routing_log(self) -> str:
+        """Byte-stable routing decision log (``record_decisions=True``):
+        one line per arrival/reroute with the worker the tree chose."""
+        return "\n".join(self.routing_records)
+
+    def place_prewarm(self, fn: str) -> Optional[str]:
+        """Start one replica of ``fn`` on the worker the placer picks —
+        the autoscaler's scale-up entry into the placement layer.
+
+        Candidates are offered coldest-in-``fn`` first (fewest replicas
+        of the function, then fewest instances overall, then name — the
+        deterministic preference order the control loop always used);
+        the placer bin-packs within that order. Returns the worker name,
+        or None when no worker has memory/instance headroom."""
+        cfg = self.store.get(fn)
+        cands = sorted(
+            (self.workers[n] for n in self._worker_list
+             if n in self.workers),
+            key=lambda w: (w.fn_replicas(fn), w.total_instances, w.name))
+        for w in self.placer.place_order(fn, cfg.memory_mb, cands):
+            if self.prewarm(w.name, fn):
+                return w.name
+        return None
+
+    def place_reap(self, fn: str) -> Optional[str]:
+        """Stop one idle replica of ``fn`` off the worker the placer
+        picks (warmest-in-``fn`` candidates first) — the scale-down
+        mirror of :meth:`place_prewarm`. Returns the worker name, or
+        None when no worker holds an idle ready replica."""
+        cands = sorted(
+            (self.workers[n] for n in self._worker_list
+             if n in self.workers),
+            key=lambda w: (-w.fn_replicas(fn), w.name))
+        for w in self.placer.reap_order(fn, cands):
+            if self.reap(w.name, fn):
+                return w.name
+        return None
 
     def attach_autoscaler(self, scaler, *, first_tick_s: float = None):
         """Bind an ``repro.autoscale.Autoscaler`` and schedule its periodic
@@ -307,13 +562,21 @@ class Simulator:
                 worker=w.name, queue_len=len(w.queue), inflight=w.inflight(),
                 capacity=w.slots_total(), warm_fns=w.warm_fns(),
                 healthy=w.healthy, fn_queue=w.queue.depths(),
-                fn_free_slots=w.fn_free_slots(self.now))
+                fn_free_slots=w.fn_free_slots(self.now),
+                mem_free_mb=w.mem_free_mb())
         else:
             state = WorkerState(
                 worker=w.name, queue_len=len(w.queue), inflight=w.inflight(),
                 capacity=w.slots_total(), warm_fns=w.warm_fns(),
                 healthy=w.healthy)
         self.view.update(state, self.now)
+        if self._branch_view_needed:
+            leaf = self._leaf_of.get(w.name)
+            if leaf is not None:
+                self._refresh_branch_view(leaf)
+            anc = self._worker_ancestors.get(w.name)
+            if anc:
+                self._node_dirty.update(anc)
 
     def _on_autoscale_tick(self, _payload):
         if self.autoscaler is None:
@@ -332,11 +595,20 @@ class Simulator:
         if self._healthy_count == 0:
             self._record_fail(req, "no healthy workers")
             return
+        if (self.view.estimator is not None
+                and req.fn not in self.view.fn_memory):
+            # deadline routing needs the fn's footprint to spot workers
+            # where a cold start is memory-blocked
+            self.view.fn_memory[req.fn] = self.store.get(req.fn).memory_mb
         wid, hops = self.tree.route(req, self.view, self.rng, self.now)
         if not self.workers[wid].healthy:          # stale routing: re-roll
             healthy = [w for w in self._worker_list
                        if self.workers[w].healthy]
             wid = self.rng.choice(healthy)
+        if self._record:
+            self.routing_records.append(
+                f"t={self.now:.6f} arrival rid={req.rid} fn={req.fn} "
+                f"worker={wid}")
         w = self.workers[wid]
         cfg = self.store.get(req.fn)
         self.telemetry.append(TelemetryRecord(
@@ -374,6 +646,10 @@ class Simulator:
             healthy = [w for w in self._worker_list
                        if self.workers[w].healthy]
             wid = self.rng.choice(healthy)
+        if self._record:
+            self.routing_records.append(
+                f"t={self.now:.6f} reroute rid={req.rid} fn={req.fn} "
+                f"worker={wid}")
         req._worker = wid
         self._push(self.now + self.hop_s * hops, "enqueue", req)
 
@@ -381,7 +657,8 @@ class Simulator:
         if req.rid in self._finished:
             return
         clone = Request(fn=req.fn, arrival_t=self.now, payload=req.payload,
-                        size=req.size, hedged_from=req.rid)
+                        size=req.size, hedged_from=req.rid,
+                        deadline_t=req.deadline_t)
         self._on_arrival(clone)
 
     def _on_fail(self, worker: str):
@@ -477,6 +754,7 @@ class Simulator:
                 if started is None:
                     kept.append(req)
                     saturated = True
+                    self._maybe_poke_timeout(w, req, cfg)
                 elif started.ready_t <= now:
                     # instant start (explicit cold_start_s=0.0): the new
                     # replica is ready capacity, not warming — serve on
@@ -524,6 +802,7 @@ class Simulator:
             started = self._maybe_start_instance(w, cfg)
             if started is None:
                 kept.append(req)
+                self._maybe_poke_timeout(w, req, cfg)
                 break                       # saturated: rest stays queued
             rs = w.replica_sets[fn]         # created on first start
             if started.ready_t <= now:
@@ -537,6 +816,17 @@ class Simulator:
             self._poke(w, started.ready_t)
             kept.append(req)
         q.restore(fn, kept)
+
+    def _maybe_poke_timeout(self, w: _Worker, req: Request, cfg) -> None:
+        """A start refused for *memory* can be blocked permanently (no
+        finish/idle event need ever touch this worker again), which would
+        strand the queued request without even its timeout failure. Poke
+        the worker just past the request's queue deadline so the flush
+        runs. Slot-saturation refusals are excluded: they always clear
+        through a finish, and uncapped runs must stay byte-identical to
+        the pre-placement simulator."""
+        if not w.fits(cfg.memory_mb):
+            self._poke(w, req.arrival_t + cfg.timeout_s + 1e-6)
 
     def _poke(self, w: "_Worker", t: float):
         key = round(t, 9)
@@ -554,7 +844,8 @@ class Simulator:
     def _maybe_start_instance(self, w: _Worker, cfg) -> Optional[Instance]:
         rs = w.replica_sets.get(cfg.name)
         if ((rs is not None and len(rs) >= cfg.max_instances_per_worker)
-                or w.total_instances >= w.capacity_slots):
+                or w.total_instances >= w.capacity_slots
+                or not w.fits(cfg.memory_mb)):   # placement memory admission
             return None
         # an explicitly configured cold_start_s=0.0 means *instant*, only
         # an unset (None) config falls back to the platform default
@@ -563,17 +854,19 @@ class Simulator:
         inst = Instance(iid=f"{w.name}/i{next(self._iid)}", fn=cfg.name,
                         slots=cfg.concurrency,
                         ready_t=self.now + cold * w.slowdown,
-                        last_used=self.now)
+                        last_used=self.now,
+                        memory_mb=cfg.memory_mb)
         w.add_instance(inst)
         w.cold_starts += 1
         w.instances_started += 1
         self.cold_starts_total += 1
+        if self._record:
+            self._log_placement("start", w, cfg.name)
         return inst
 
     def _start_service(self, w: _Worker, inst: Instance, req: Request, cfg,
                        queue_len: int):
-        inst.busy += 1
-        w._inflight += 1
+        w.note_busy(inst, +1)
         inst.last_used = self.now
         cold = inst.ready_t > req.arrival_t
         dur, ok = self.model.sample(
@@ -600,8 +893,7 @@ class Simulator:
         w = self._draining.get(wname) if draining else self.workers[wname]
         inst = w.iid_index.get(iid) if w is not None else None
         if inst is not None:               # O(1) via the iid index
-            inst.busy -= 1
-            w._inflight -= 1
+            w.note_busy(inst, -1)
             inst.last_used = self.now
             self._push(self.now + self.store.get(req.fn).idle_timeout_s,
                        "idle_check", (wname, iid))
@@ -617,6 +909,10 @@ class Simulator:
                             finish_t=self.now, cold_start=cold,
                             worker=wname, instance=iid)
         self.results.append(res)
+        if self.view.estimator is not None and ok:
+            # deadline routing prices backlogs with this windowed
+            # observation; fed in result order, so it is deterministic
+            self.view.estimator.observe(req.fn, res.service_time)
         rec = self.telemetry[req._telemetry_idx]
         rec.latency = res.latency
         rec.ok = ok
@@ -637,6 +933,8 @@ class Simulator:
                 self.now - inst.last_used >=
                 self.store.get(inst.fn).idle_timeout_s - 1e-9):
             w.remove_instance(inst)
+            if self._record:
+                self._log_placement("idle", w, inst.fn)
             if len(w.queue) > 0:
                 # the freed capacity slot may unblock another function's
                 # backlog (the seed left such work stranded until the

@@ -41,6 +41,10 @@ class Request:
     size: int = 16                     # prompt tokens (cost driver)
     rid: int = field(default_factory=lambda: next(_req_ids))
     hedged_from: Optional[int] = None  # straggler-mitigation clone marker
+    # absolute completion deadline (arrival + the function's slo_p95_s),
+    # stamped by the workload layer; None => no latency objective.
+    # deadline_aware routing scores branches against the remaining slack.
+    deadline_t: Optional[float] = None
 
 
 @dataclass

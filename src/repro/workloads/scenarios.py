@@ -88,23 +88,35 @@ def daily_cycle(*, fn: str = "fn", mean_rps: float = 150.0,
 
 @register_scenario("multi_tenant")
 def multi_tenant(*, rps: float = 300.0, duration_s: float = 30.0,
-                 seed: int = 1, rid_base: Optional[int] = 0) -> MixedWorkload:
+                 seed: int = 1, memory_skew: bool = False,
+                 rid_base: Optional[int] = 0) -> MixedWorkload:
     """Three tenants with distinct cost classes: chat (frequent, small),
     embed (mid), batch (rare, huge prompts). Feeds RQ-B two+ cost
-    classes and exercises warm-affinity routing."""
+    classes and exercises warm-affinity routing. ``memory_skew=True``
+    additionally gives the tenants heterogeneous replica footprints
+    (chat small, batch huge) — the shape where placement quality shows."""
     # per-tenant SLOs: interactive chat is tight, embedding mid, batch loose
+    mem = {"chat": 256, "embed": 512, "batch": 1536} if memory_skew else {}
     profiles = [
         FunctionProfile("chat", weight=6.0, size=SizeDist.lognormal(32, 0.6),
-                        slo_p95_s=0.5),
+                        slo_p95_s=0.5, memory_mb=mem.get("chat")),
         FunctionProfile("embed", weight=3.0, size=SizeDist.uniform(8, 64),
-                        slo_p95_s=1.0),
+                        slo_p95_s=1.0, memory_mb=mem.get("embed")),
         FunctionProfile("batch", weight=1.0,
                         size=SizeDist.choice([256, 512, 1024],
                                              [0.5, 0.3, 0.2]),
-                        slo_p95_s=5.0),
+                        slo_p95_s=5.0, memory_mb=mem.get("batch")),
     ]
     return MixedWorkload(PoissonArrivals(rps), profiles,
                          duration_s=duration_s, seed=seed, rid_base=rid_base)
+
+
+@register_scenario("multi_tenant_memory")
+def multi_tenant_memory(**overrides) -> MixedWorkload:
+    """The memory-skewed ``multi_tenant`` variant as a first-class name:
+    heterogeneous per-tenant replica footprints for placement studies."""
+    overrides.setdefault("memory_skew", True)
+    return multi_tenant(**overrides)
 
 
 @register_scenario("trace_replay")
@@ -131,13 +143,16 @@ _DEMO_CFG = {
 def install_demo_configs(store, workload: MixedWorkload) -> None:
     """Register a sensible FunctionConfig for every fn in the mix that the
     store does not already know — lets examples/benches run any scenario
-    without per-function boilerplate."""
-    for fn in workload.fns():
+    without per-function boilerplate. A profile's ``memory_mb`` (if set)
+    carries through to the config, so memory-skewed scenarios reach the
+    placement layer with no extra wiring."""
+    for p in workload.profiles:
         try:
-            store.get(fn)
+            store.get(p.fn)
             continue
         except KeyError:
             pass
-        arch, conc, cold = _DEMO_CFG.get(fn, ("tiny_lm", 4, 0.2))
-        store.put(FunctionConfig(name=fn, arch=arch, concurrency=conc,
-                                 cold_start_s=cold))
+        arch, conc, cold = _DEMO_CFG.get(p.fn, ("tiny_lm", 4, 0.2))
+        mem = {} if p.memory_mb is None else {"memory_mb": p.memory_mb}
+        store.put(FunctionConfig(name=p.fn, arch=arch, concurrency=conc,
+                                 cold_start_s=cold, **mem))

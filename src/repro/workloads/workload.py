@@ -69,14 +69,18 @@ class SizeDist:
 @dataclass(frozen=True)
 class FunctionProfile:
     """One tenant function in a mix: routing weight + prompt-size shape +
-    latency objective."""
+    latency objective + replica memory footprint."""
 
     fn: str
     weight: float = 1.0
     size: SizeDist = field(default_factory=lambda: SizeDist.const(16))
-    # per-function p95 latency SLO the slo_aware autoscaler targets;
+    # per-function p95 latency SLO the slo_aware autoscaler targets and
+    # deadline_aware routing derives request deadlines from;
     # None => no explicit objective for this tenant
     slo_p95_s: Optional[float] = None
+    # per-replica memory the placement layer bin-packs against worker
+    # capacity; None => the FunctionConfig default (512 MB)
+    memory_mb: Optional[int] = None
 
 
 class MixedWorkload:
@@ -121,11 +125,16 @@ class MixedWorkload:
             p = single if single is not None else mix_rng.choices(
                 self.profiles, weights=self._weights, k=1)[0]
             size = p.size.sample(mix_rng)
+            # slo_p95_s doubles as the request's completion deadline —
+            # what deadline_aware routing scores branches against
+            deadline = (t + p.slo_p95_s if p.slo_p95_s is not None
+                        else None)
             if rids is None:
-                yield Request(fn=p.fn, arrival_t=t, size=size)
+                yield Request(fn=p.fn, arrival_t=t, size=size,
+                              deadline_t=deadline)
             else:
                 yield Request(fn=p.fn, arrival_t=t, size=size,
-                              rid=next(rids))
+                              rid=next(rids), deadline_t=deadline)
 
     def generate(self) -> List[Request]:
         return list(self.requests())

@@ -1,0 +1,171 @@
+"""Shared op-sequence drivers for the scheduling-core property suites.
+
+Each driver takes one integer seed, builds a random operation sequence
+from it, mirrors every step against a flat reference model, and asserts
+the invariants after each op. ``tests/test_scheduling.py`` runs them over
+fixed seeds (tier-1, no optional deps); ``tests/test_property.py`` wraps
+the same drivers in hypothesis ``@given(integers())`` so CI explores the
+seed space — one body, two harnesses, so the properties can never drift
+between the lanes.
+"""
+import itertools
+import random
+
+from repro.core.scheduling import FnQueues, Instance
+from repro.core.types import Request
+
+FNS = ("a", "b", "c")
+
+
+def run_fnqueues_ops(seed: int, n_ops: int = 200) -> int:
+    """Global-FIFO ordering + deadline-heap consistency of FnQueues under
+    arbitrary interleaved push / serve / expire / drain sequences.
+
+    A flat list of (request, timeout) in push order is the reference:
+    iteration order, per-fn depths, expiry sets (strict ``now - arrival >
+    timeout``, in arrival order), and drains must all agree with it at
+    every step. Returns the number of ops checked."""
+    rng = random.Random(seed)
+    q = FnQueues()
+    ref = []                   # live (req, timeout_s) in arrival order
+    now = 0.0
+    rid = itertools.count()
+    for _ in range(n_ops):
+        op = rng.random()
+        now += rng.random() * 0.1
+        if op < 0.55:                                      # push
+            r = Request(fn=rng.choice(FNS), arrival_t=now, rid=next(rid))
+            timeout = rng.choice([0.05, 0.2, 0.5, 2.0])
+            q.push(r, timeout_s=timeout)
+            ref.append((r, timeout))
+        elif op < 0.75 and len(q):                         # serve a head
+            fn = rng.choice(q.active_fns())
+            head = q.scan_head(fn)
+            q.pop_head(fn)
+            q.mark_served(head)
+            ref = [e for e in ref if e[0] is not head]
+        elif op < 0.95:                                    # flush timeouts
+            expired = q.pop_expired(now)
+            want = [r for r, to in ref if now - r.arrival_t > to]
+            assert [r.rid for r in expired] == [r.rid for r in want]
+            gone = set(id(r) for r in want)
+            ref = [e for e in ref if id(e[0]) not in gone]
+            # deadline-heap consistency: nothing live is past its deadline
+            assert not any(now - r.arrival_t > to for r, to in ref)
+        else:                                              # drain (failover)
+            drained = q.drain_all()
+            assert [r.rid for r in drained] == [e[0].rid for e in ref]
+            ref = []
+        # global FIFO: iteration equals the reference, in arrival order
+        assert len(q) == len(ref)
+        assert [r.rid for r in q] == [e[0].rid for e in ref]
+        for fn in FNS:
+            assert q.depth(fn) == sum(e[0].fn == fn for e in ref)
+        assert sorted(q.active_fns()) == sorted(
+            {e[0].fn for e in ref})
+    return n_ops
+
+
+def run_replica_index_ops(seed: int, n_ops: int = 150) -> int:
+    """FunctionReplicaSet index <-> iid-map agreement (plus the
+    incremental memory and slots_total counters) on a simulator worker
+    under random add / busy-churn / remove / clear sequences."""
+    from repro.core.simulator import _Worker
+    rng = random.Random(seed)
+    w = _Worker("w", capacity_slots=10 ** 9,
+                memory_mb=rng.choice([None, 65536.0]))
+    iids = itertools.count()
+    live = []
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.5:                                       # start a replica
+            inst = Instance(iid=f"w/i{next(iids)}", fn=rng.choice(FNS),
+                            slots=rng.choice([0, 1, 2, 4]),
+                            memory_mb=rng.choice([128.0, 256.0, 1536.0]))
+            w.add_instance(inst)
+            live.append(inst)
+        elif op < 0.75 and live:                           # reap one
+            # the platform only reaps *idle* replicas (reap/idle_check
+            # both require busy == 0) — model exactly that
+            idle = [i for i in live if i.busy == 0]
+            if idle:
+                inst = idle[rng.randrange(len(idle))]
+                live.remove(inst)
+                w.remove_instance(inst)
+        elif op < 0.97:                                    # occupancy churn
+            if live:
+                inst = rng.choice(live)
+                delta = 1 if inst.busy == 0 or rng.random() < 0.6 else -1
+                w.note_busy(inst, delta)
+        else:                                              # worker failure
+            w.clear_instances()
+            live = []
+        # index <-> iid-map agreement
+        assert w.total_instances == len(live)
+        in_sets = {i.iid for rs in w.replica_sets.values()
+                   for i in rs.instances}
+        assert set(w.iid_index) == in_sets == {i.iid for i in live}
+        for fn, rs in w.replica_sets.items():
+            assert all(i.fn == fn for i in rs.instances)
+            assert abs(rs.mem_mb
+                       - sum(i.memory_mb for i in rs.instances)) < 1e-6
+        # incremental counters match flat rescans
+        assert abs(w.memory_used_mb
+                   - sum(i.memory_mb for i in live)) < 1e-6
+        flat_slots = sum((i.slots if i.slots > 0 else max(i.busy, 1))
+                        for i in live) or 1
+        assert w.slots_total() == flat_slots
+        assert w.inflight() == sum(i.busy for i in live)
+    return n_ops
+
+
+def run_memory_cap_trial(seed: int) -> None:
+    """One randomized memory-capped simulation in which every instance
+    add/remove checks the capacity invariant (used by both the tier-1
+    placement suite and the hypothesis lane)."""
+    from repro.core import simulator as S
+    from repro.core.config_store import ConfigStore
+    from repro.core.placement import list_placers
+    from repro.core.router import build_tree
+    from repro.core.simulator import Simulator, SyntheticServiceModel
+    from repro.workloads import build_scenario, install_demo_configs
+
+    rng = random.Random(seed)
+    scenario = rng.choice(["multi_tenant", "flash_crowd", "steady"])
+    over = {"multi_tenant": dict(rps=150.0, memory_skew=True),
+            "flash_crowd": dict(burst_rps=600.0),
+            "steady": dict(rps=120.0)}[scenario]
+    cap = rng.choice([512, 1024, 2048, 4096])
+    wl = build_scenario(scenario, duration_s=4.0, seed=rng.randrange(100),
+                        **over)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_tree(4, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=rng.randrange(100),
+                    worker_memory_mb=cap,
+                    placer=rng.choice(list_placers()))
+    sim.load(wl)
+
+    orig_add, orig_rm = S._Worker.add_instance, S._Worker.remove_instance
+
+    def checked(w):
+        flat = sum(i.memory_mb for i in w.iid_index.values())
+        assert abs(w.memory_used_mb - flat) < 1e-6
+        if w.memory_mb is not None:
+            assert w.memory_used_mb <= w.memory_mb + 1e-9, \
+                (w.name, w.memory_used_mb, w.memory_mb)
+
+    def add(self, inst):
+        orig_add(self, inst)
+        checked(self)
+
+    def rm(self, inst):
+        orig_rm(self, inst)
+        checked(self)
+    S._Worker.add_instance, S._Worker.remove_instance = add, rm
+    try:
+        sim.run()
+    finally:
+        S._Worker.add_instance, S._Worker.remove_instance = orig_add, orig_rm
+    for w in sim.workers.values():
+        assert w.memory_used_mb <= cap + 1e-9

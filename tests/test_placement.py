@@ -1,0 +1,456 @@
+"""Placement layer + deadline-aware routing: the ISSUE-4 regression suite.
+
+The contracts under test:
+
+- the placer registry (`first_fit`, `best_fit_memory`, `spread`) ranks
+  workers deterministically and only ever offers workers with memory
+  headroom;
+- worker memory capacity is *never* exceeded: the per-worker incremental
+  footprint equals a flat rescan and stays under the cap at every
+  instance add, across randomized scenario sweeps;
+- unlimited memory + `first_fit` reproduces the pre-placement (PR 3)
+  simulator byte-for-byte — golden digests recorded at the PR 3 tree
+  are pinned below, so the new layer is provably a no-op until a memory
+  cap is configured;
+- placement + routing decision logs are seeded: same seed => byte
+  identical logs on `flash_crowd` and `multi_tenant` (digests pinned);
+- acceptance: on a memory-skewed `multi_tenant`, `best_fit_memory`
+  placement + `deadline_aware` routing meets every tenant's p95 SLO at
+  lower worker-seconds than `first_fit` + `least_loaded` (the PR 3
+  style baseline), same enforcement style as the slo_aware test.
+"""
+import hashlib
+
+import pytest
+
+from repro.autoscale import Autoscaler, build_pool, get_autoscaler
+from repro.core.config_store import ConfigStore
+from repro.core.placement import (PLACERS, Placer, get_placer, list_placers,
+                                  register_placer)
+from repro.core.router import build_tree
+from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                  summarize)
+from repro.core.types import FunctionConfig, Request
+from repro.workloads import build_scenario, install_demo_configs
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_complete():
+    assert set(list_placers()) >= {"first_fit", "best_fit_memory", "spread"}
+    assert sorted(PLACERS) == list_placers()
+    assert get_placer("first_fit").name == "first_fit"
+    with pytest.raises(KeyError):
+        get_placer("nope")
+
+
+def test_register_custom_placer():
+    @register_placer
+    class _Tight(Placer):
+        name = "_test_tightest"
+
+        def place_order(self, fn, memory_mb, workers):
+            return sorted((w for w in workers if w.fits(memory_mb)),
+                          key=lambda w: w.mem_free_mb())
+    try:
+        assert "_test_tightest" in list_placers()
+        assert isinstance(get_placer("_test_tightest"), _Tight)
+    finally:
+        del PLACERS["_test_tightest"]
+
+
+# ------------------------------------------------------------ placer ranking
+class _FakeWorker:
+    def __init__(self, name, free_mb, fn_reps=0, total=0):
+        self.name = name
+        self._free = free_mb
+        self._reps = fn_reps
+        self.total_instances = total
+
+    def fits(self, mem):
+        return self._free >= mem
+
+    def mem_free_mb(self):
+        return self._free
+
+    def fn_replicas(self, fn):
+        return self._reps
+
+
+def test_first_fit_keeps_candidate_order_and_filters_fit():
+    ws = [_FakeWorker("a", 100), _FakeWorker("b", 600),
+          _FakeWorker("c", 512)]
+    order = get_placer("first_fit").place_order("fn", 512, ws)
+    assert [w.name for w in order] == ["b", "c"]
+
+
+def test_best_fit_picks_tightest_gap():
+    ws = [_FakeWorker("a", 2048), _FakeWorker("b", 600),
+          _FakeWorker("c", 512), _FakeWorker("d", 100)]
+    order = get_placer("best_fit_memory").place_order("fn", 512, ws)
+    assert [w.name for w in order] == ["c", "b", "a"]
+    # reap relieves the most memory-pressured worker first
+    reap = get_placer("best_fit_memory").reap_order("fn", ws)
+    assert [w.name for w in reap] == ["d", "c", "b", "a"]
+
+
+def test_spread_prefers_fewest_replicas_then_headroom():
+    ws = [_FakeWorker("a", 1024, fn_reps=2), _FakeWorker("b", 512, fn_reps=0),
+          _FakeWorker("c", 1024, fn_reps=0), _FakeWorker("d", 100, fn_reps=0)]
+    order = get_placer("spread").place_order("fn", 256, ws)
+    assert [w.name for w in order] == ["c", "b", "a"]
+
+
+def test_placers_degenerate_to_input_order_when_uncapped():
+    """Stable sorts on all-equal (inf) memory keys must preserve the
+    simulator's preference order — the property that keeps uncapped runs
+    byte-identical across every placer."""
+    ws = [_FakeWorker(n, float("inf")) for n in ("w2", "w0", "w1")]
+    for name in ("first_fit", "best_fit_memory"):
+        order = get_placer(name).place_order("fn", 512, ws)
+        assert [w.name for w in order] == ["w2", "w0", "w1"], name
+
+
+# ------------------------------------------------------- memory admission
+@pytest.fixture
+def store():
+    s = ConfigStore()
+    s.put(FunctionConfig(name="small", arch="tiny_lm", concurrency=2,
+                         cold_start_s=0.05, idle_timeout_s=5.0,
+                         memory_mb=256))
+    s.put(FunctionConfig(name="big", arch="tiny_lm", concurrency=1,
+                         cold_start_s=0.05, idle_timeout_s=5.0,
+                         memory_mb=1536))
+    return s
+
+
+def test_prewarm_respects_memory_capacity(store):
+    sim = Simulator(build_tree(1, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=5,
+                    worker_memory_mb=2048)
+    w = sim._worker_list[0]
+    assert sim.prewarm(w, "big")                 # 1536 of 2048
+    assert sim.prewarm(w, "small")               # 1792 of 2048
+    assert sim.prewarm(w, "small")               # 2048 of 2048
+    assert not sim.prewarm(w, "small"), "no memory left"
+    assert not sim.prewarm(w, "big")
+    ww = sim.workers[w]
+    assert ww.memory_used_mb == 2048
+    assert ww.mem_free_mb() == 0
+    assert ww.replica_sets["big"].mem_mb == 1536
+    assert ww.replica_sets["small"].mem_mb == 512
+
+
+def test_reap_frees_memory_for_new_placement(store):
+    # instant cold start (the ISSUE-3 falsy-zero fix): the prewarmed
+    # replica is ready — and hence reapable — immediately
+    store.put(FunctionConfig(name="big", arch="tiny_lm", concurrency=1,
+                             cold_start_s=0.0, idle_timeout_s=5.0,
+                             memory_mb=1536))
+    sim = Simulator(build_tree(1, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=5,
+                    worker_memory_mb=2048)
+    w = sim._worker_list[0]
+    assert sim.prewarm(w, "big")
+    assert not sim.workers[w].fits(1536)
+    assert sim.reap(w, "big")
+    assert sim.workers[w].memory_used_mb == 0
+    assert sim.workers[w].fits(1536)
+
+
+def test_place_prewarm_uses_placer_and_reports_exhaustion(store):
+    for name, mem in (("small", 256), ("big", 1536)):
+        store.put(FunctionConfig(name=name, arch="tiny_lm", concurrency=1,
+                                 cold_start_s=0.0, idle_timeout_s=5.0,
+                                 memory_mb=mem))
+    sim = Simulator(build_tree(2, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=5,
+                    worker_memory_mb=1536, placer="best_fit_memory")
+    assert sim.place_prewarm("big") == "w0"      # coldest first
+    assert sim.place_prewarm("big") == "w1"
+    assert sim.place_prewarm("big") is None      # both workers full
+    assert sim.place_prewarm("small") is None    # 1536 used everywhere
+    assert sim.place_reap("big") in ("w0", "w1")
+    assert sim.place_prewarm("small") is not None
+
+
+def test_unplaceable_function_fails_not_crashes(store):
+    """A function whose footprint exceeds every worker's capacity can
+    never start; its requests must time out cleanly."""
+    store.put(FunctionConfig(name="huge", arch="tiny_lm", memory_mb=4096,
+                             timeout_s=0.5))
+    sim = Simulator(build_tree(2, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=5,
+                    worker_memory_mb=2048)
+    sim.submit(Request(fn="huge", arrival_t=0.0))
+    res = sim.run()
+    assert len(res) == 1 and not res[0].ok
+    assert res[0].error == "queue timeout"
+
+
+# ----------------------------------------- memory-capacity invariant (prop)
+@pytest.mark.parametrize("trial", range(6))
+def test_memory_capacity_never_exceeded_under_random_churn(trial):
+    """Acceptance invariant: sum of placed replicas' memory_mb stays
+    under the worker capacity at every instance add/remove, across
+    randomized scenario/placer/capacity draws (seeded, so failures
+    reproduce; the hypothesis lane in test_property.py explores the same
+    driver over the whole seed space)."""
+    from _prop_drivers import run_memory_cap_trial
+    run_memory_cap_trial(1000 + trial)
+
+
+# -------------------------------------- golden: unlimited memory == PR 3
+def _digest(sim):
+    h = hashlib.sha256()
+    for r in sim.results:
+        h.update(repr((r.rid, r.fn, r.ok, r.arrival_t, r.start_t, r.finish_t,
+                       r.cold_start, r.worker, r.instance, r.error)).encode())
+    for t in sim.telemetry:
+        h.update(repr((t.fn, t.t, t.queue_len, t.inflight, t.batch_size,
+                       t.cold, t.latency, t.ok)).encode())
+    return h.hexdigest()[:16]
+
+
+FLASH = dict(duration_s=30.0, seed=3, base_rps=12.0, burst_rps=1000.0,
+             mean_burst_s=2.0, mean_calm_s=10.0)
+
+
+def test_unlimited_memory_first_fit_matches_pr3_plain_run():
+    """Digest recorded from the PR 3 simulator (pre-placement) on this
+    exact configuration: first_fit with uncapped workers must not move a
+    byte of the result/telemetry stream."""
+    wl = build_scenario("multi_tenant", rps=400.0, duration_s=8.0, seed=3)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_tree(8, fanout=4, leaf_policy="warm_least_loaded"),
+                    store, SyntheticServiceModel(seed=2), seed=7,
+                    placer="first_fit", worker_memory_mb=None)
+    sim.load(wl)
+    sim.run()
+    assert _digest(sim) == "856e5836b8ce9cd9"
+
+
+def test_unlimited_memory_first_fit_matches_pr3_autoscaled_run():
+    """Same contract through the full control loop: slo_aware per-fn
+    prewarm/reap now flows through place_prewarm/place_reap, and with
+    uncapped first_fit that path must reproduce the PR 3 decision
+    stream and results exactly."""
+    wl = build_scenario("flash_crowd", **FLASH)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_pool(1, 2, leaf_policy="warm_least_loaded"), store,
+                    SyntheticServiceModel(seed=2), seed=7,
+                    worker_capacity_slots=1, placer="first_fit")
+    pol = get_autoscaler("slo_aware", slo_p95_s=wl.slo_targets())
+    scaler = Autoscaler(pol, interval_s=0.25, window_s=2.0, min_replicas=1,
+                        max_replicas=8, workers_per_replica=2, cooldown_s=2.0,
+                        leaf_policy="warm_least_loaded")
+    sim.attach_autoscaler(scaler)
+    sim.load(wl)
+    sim.run()
+    assert _digest(sim) == "9019f07d1f8667aa"
+    dec = hashlib.sha256(scaler.decision_log().encode()).hexdigest()[:16]
+    assert dec == "c7a8b3d40c5fc522"
+
+
+# ------------------------------- golden: placement + routing decision logs
+def _decision_log_sim(scenario, **over):
+    wl = build_scenario(scenario, duration_s=6.0, seed=3, **over)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(
+        build_tree(8, fanout=4, leaf_policy="deadline_aware",
+                   inner_policy="deadline_aware"),
+        store, SyntheticServiceModel(seed=2), seed=7,
+        worker_memory_mb=2048, placer="best_fit_memory",
+        record_decisions=True)
+    sim.load(wl)
+    sim.run()
+    return sim
+
+
+DECISION_GOLDEN = {
+    # sha256[:16] of (placement_log, routing_log); recorded at ISSUE 4
+    "flash_crowd": ("3f7810309f554a8e", "2bd7c3adb429b9fa"),
+    "multi_tenant": ("3d641e4f3dce5bd5", "3d947fc9d8aa9a1f"),
+}
+
+
+@pytest.mark.parametrize("scenario", sorted(DECISION_GOLDEN))
+def test_same_seed_identical_decision_logs(scenario):
+    over = (dict(memory_skew=True, rps=200.0)
+            if scenario == "multi_tenant" else dict(burst_rps=800.0))
+    a = _decision_log_sim(scenario, **over)
+    b = _decision_log_sim(scenario, **over)
+    assert a.placement_records, "placement log must not be empty"
+    assert a.routing_records, "routing log must not be empty"
+    assert a.placement_log() == b.placement_log()
+    assert a.routing_log() == b.routing_log()
+    place = hashlib.sha256(a.placement_log().encode()).hexdigest()[:16]
+    route = hashlib.sha256(a.routing_log().encode()).hexdigest()[:16]
+    assert (place, route) == DECISION_GOLDEN[scenario]
+
+
+def test_decision_logs_off_by_default():
+    wl = build_scenario("steady", rps=100.0, duration_s=2.0, seed=3)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_tree(2, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=7)
+    sim.load(wl)
+    sim.run()
+    assert sim.placement_records == [] and sim.routing_records == []
+
+
+# --------------------------------------------- O(1) slots_total regression
+def test_slots_total_counter_matches_flat_scan_under_churn():
+    """ISSUE-4 satellite: slots_total is now an incremental counter; it
+    must match the flat recomputation after every event, including
+    slots==0 (unlimited-concurrency) instances whose contribution shifts
+    with occupancy."""
+    from repro.core import simulator as S
+    wl = build_scenario("multi_tenant", rps=300.0, duration_s=5.0, seed=3)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    # one unlimited-concurrency tenant so max(busy, 1) contributions move
+    cfg = store.get("embed")
+    store.put(FunctionConfig(**{**cfg.__dict__, "concurrency": 0}))
+    sim = Simulator(build_tree(4, fanout=2, leaf_policy="warm_least_loaded"),
+                    store, SyntheticServiceModel(seed=2), seed=7,
+                    worker_memory_mb=2048)
+    sim.load(wl)
+
+    checked = {"n": 0}
+    orig = S.Simulator._refresh_view
+
+    def spy(self, w):
+        flat = sum((i.slots if i.slots > 0 else max(i.busy, 1))
+                   for i in w.iid_index.values()) or 1
+        assert w.slots_total() == flat, (w.name, w.slots_total(), flat)
+        checked["n"] += 1
+        orig(self, w)
+    S.Simulator._refresh_view = spy
+    try:
+        sim.run()
+    finally:
+        S.Simulator._refresh_view = orig
+    assert checked["n"] > 1000
+
+
+# -------------------------------------------------- deadline-aware routing
+def test_deadline_aware_prefers_worker_with_free_warm_slot():
+    import random as _random
+    from repro.core.router import StateView, WorkerState, deadline_aware_policy
+    view = StateView()
+    view.update(WorkerState(worker="cold", warm_fns=frozenset()), 0.0)
+    view.update(WorkerState(worker="warm", warm_fns=frozenset({"fn"}),
+                            fn_free_slots={"fn": 2}), 0.0)
+    req = Request(fn="fn", arrival_t=0.0, deadline_t=0.5)
+    pick = deadline_aware_policy(req, ["cold", "warm"], view,
+                                 _random.Random(0), 0.0)
+    assert pick == "warm"
+
+
+def test_deadline_aware_avoids_memory_blocked_cold_start():
+    import random as _random
+    from repro.core.router import StateView, WorkerState, deadline_aware_policy
+    view = StateView()
+    view.fn_memory["fn"] = 1024.0
+    # blocked looks idle (low load) but cannot host the replica;
+    # roomy carries a deep-ish queue yet can actually start one
+    view.update(WorkerState(worker="blocked", mem_free_mb=0.0,
+                            queue_len=0, inflight=0, capacity=8), 0.0)
+    view.update(WorkerState(worker="roomy", mem_free_mb=2048.0,
+                            queue_len=4, inflight=4, capacity=8,
+                            fn_queue={"fn": 2}), 0.0)
+    req = Request(fn="fn", arrival_t=0.0, deadline_t=1.0)
+    pick = deadline_aware_policy(req, ["blocked", "roomy"], view,
+                                 _random.Random(0), 0.0)
+    assert pick == "roomy"
+
+
+def test_branch_level_state_rows_published_for_deadline_trees():
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=2,
+                             cold_start_s=0.05, memory_mb=256))
+    sim = Simulator(
+        build_pool(2, 2, leaf_policy="deadline_aware",
+                   inner_policy="deadline_aware"),
+        store, SyntheticServiceModel(seed=2), seed=5,
+        worker_memory_mb=1024)
+    sim.submit(Request(fn="fn", arrival_t=0.0))
+    sim.run()
+    leaf = sim.tree.children[0].name
+    row = sim.view.get(leaf)
+    members = [sim.workers[w] for w in sim._leaf_members[leaf]]
+    assert row.capacity == sum(w.slots_total() for w in members)
+    assert row.mem_free_mb == max(w.mem_free_mb() for w in members)
+
+
+def test_inner_node_state_resolves_in_deep_trees():
+    """Trees deeper than two levels score *inner* nodes at the upper
+    LB levels; those names have no eagerly-refreshed row and must
+    resolve to a lazily-aggregated subtree state instead of the blind
+    empty default."""
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=2,
+                             cold_start_s=0.05, memory_mb=256,
+                             idle_timeout_s=30.0))
+    sim = Simulator(
+        build_tree(16, fanout=2, leaf_policy="deadline_aware",
+                   inner_policy="deadline_aware"),
+        store, SyntheticServiceModel(seed=2), seed=5,
+        worker_memory_mb=1024)
+    wl = build_scenario("steady", rps=200.0, duration_s=2.0, seed=4)
+    sim.load(wl)
+    sim.run(until=1.0)            # mid-run: replicas are live and warm
+    inner = sim.tree.children[0]
+    assert not inner.is_leaf, "16 workers at fanout 2 must nest inner nodes"
+    row = sim.view.get(inner.name)
+    # the aggregate is over the members' *view rows* (the same staleness
+    # the per-worker rows model), not live worker state
+    rows = [sim.view.get(w) for w in inner.all_workers()]
+    assert row.capacity == sum(r.capacity for r in rows)
+    assert row.mem_free_mb == max(r.mem_free_mb for r in rows if r.healthy)
+    assert row.inflight == sum(r.inflight for r in rows)
+    assert "fn" in row.warm_fns
+    # unknown names still fall back to the empty default
+    assert sim.view.get("no-such-node").capacity == 1
+
+
+# ------------------------------------------------ acceptance: best_fit wins
+def _acceptance_run(placer, leaf, inner):
+    """Run one matrix cell through the *shared* ISSUE-4 acceptance
+    surface (examples/placement_study.py run_cell — the same definition
+    the CI bench imports), so the pinned acceptance, the study, and the
+    bench can never drift apart."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "examples"))
+    from placement_study import CELLS, run_cell
+    assert (placer, leaf, inner) in CELLS
+    sim, scaler, results, per_fn = run_cell(placer, leaf, inner)
+    targets = {fn: slo for fn, (p95, slo) in per_fn.items()}
+    p95 = {fn: p for fn, (p, slo) in per_fn.items()}
+    return targets, p95, scaler, summarize(results)
+
+
+def test_best_fit_deadline_aware_meets_slo_cheaper_than_first_fit():
+    """The placement-layer headline: on a memory-skewed multi_tenant mix
+    (batch replicas monopolise a worker's memory), best_fit_memory
+    packing + deadline_aware routing must meet every tenant's p95 SLO
+    while spending fewer worker-seconds than the PR 3-style first_fit +
+    least_loaded baseline — same enforcement style as the slo_aware
+    acceptance test."""
+    targets, p95_base, sc_base, s_base = _acceptance_run(
+        "first_fit", "least_loaded", "random")
+    targets2, p95_new, sc_new, s_new = _acceptance_run(
+        "best_fit_memory", "deadline_aware", "deadline_aware")
+    assert targets == targets2 and set(targets) == {"chat", "embed", "batch"}
+    for fn, slo in targets.items():
+        assert p95_new[fn] < slo, (fn, p95_new[fn], slo)
+    assert sc_new.worker_seconds < sc_base.worker_seconds
+    # and the baseline is genuinely worse: it blows at least one SLO
+    assert any(not (p95_base[fn] < slo) for fn, slo in targets.items())
+    assert s_new["fail_rate"] <= s_base["fail_rate"]

@@ -185,9 +185,9 @@ def test_simulator_concurrency_never_exceeded(seed):
     max_seen = 0
     orig = Simulator._start_service
 
-    def spy(self, w, inst, req, cfg):
+    def spy(self, w, inst, req, cfg, queue_len):
         nonlocal max_seen
-        orig(self, w, inst, req, cfg)
+        orig(self, w, inst, req, cfg, queue_len)
         max_seen = max(max_seen, inst.busy)
     Simulator._start_service = spy
     try:
@@ -195,6 +195,41 @@ def test_simulator_concurrency_never_exceeded(seed):
     finally:
         Simulator._start_service = orig
     assert max_seen <= c
+
+
+# ------------------------------------ scheduling core + placement (ISSUE 4)
+# The op-sequence drivers live in tests/_prop_drivers.py and are also run
+# over fixed seeds by the tier-1 suites (test_scheduling / test_placement);
+# here hypothesis explores the seed space and shrinks failures to a seed.
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_fnqueues_global_fifo_and_deadline_heap(seed):
+    """FnQueues keeps exact global-FIFO order, per-fn depths, and a
+    consistent deadline heap under arbitrary interleaved push / serve /
+    expire / drain sequences."""
+    from _prop_drivers import run_fnqueues_ops
+    assert run_fnqueues_ops(seed) > 0
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_replica_set_index_matches_iid_map(seed):
+    """FunctionReplicaSet lists, the worker iid index, and the
+    incremental memory/slots/inflight counters agree with flat rescans
+    after random add / busy-churn / remove / clear sequences."""
+    from _prop_drivers import run_replica_index_ops
+    assert run_replica_index_ops(seed) > 0
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_worker_memory_capacity_never_exceeded(seed):
+    """End-to-end placement invariant: no worker's placed-replica memory
+    ever exceeds its capacity, for random scenarios, placers, and caps."""
+    from _prop_drivers import run_memory_cap_trial
+    run_memory_cap_trial(seed)
 
 
 @given(st.integers(0, 10**6), st.integers(0, 10**6))

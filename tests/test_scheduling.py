@@ -269,3 +269,19 @@ def test_worker_instances_view_matches_replica_sets(store):
     assert [i.iid for i in w.instances["fn"]] == \
         [i.iid for i in w.replica_sets["fn"].instances]
     assert w.iid_index[w.instances["fn"][0].iid] is w.instances["fn"][0]
+
+
+# ------------------------------------ op-sequence property drivers (ISSUE 4)
+# Fixed-seed runs of the shared drivers keep these invariants in the
+# tier-1 lane even without hypothesis; tests/test_property.py wraps the
+# same drivers in @given(integers()) to explore the seed space in CI.
+@pytest.mark.parametrize("seed", range(5))
+def test_fnqueues_fifo_and_deadline_heap_under_interleaved_ops(seed):
+    from _prop_drivers import run_fnqueues_ops
+    assert run_fnqueues_ops(seed) > 0
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_replica_index_agrees_with_iid_map_under_churn(seed):
+    from _prop_drivers import run_replica_index_ops
+    assert run_replica_index_ops(seed) > 0
