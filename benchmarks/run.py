@@ -195,7 +195,10 @@ def bench_kernels():
 
 def bench_workload_scenarios():
     """Named workload shapes (repro.workloads) end-to-end, then a ≥1M-
-    request bursty multi-function capacity probe reporting events/s."""
+    request bursty multi-function capacity probe reporting events/s.
+    REPRO_EVENT_BACKEND selects the event-queue backend (default
+    single_heap) — CI runs this bench once per backend and fails if
+    `sharded` regresses events/s on the capacity probe."""
     from repro.core.config_store import ConfigStore
     from repro.core.router import build_tree
     from repro.core.simulator import (Simulator, SyntheticServiceModel,
@@ -204,12 +207,14 @@ def bench_workload_scenarios():
     from repro.workloads import (BurstyArrivals, FunctionProfile,
                                  MixedWorkload, SizeDist, build_scenario,
                                  install_demo_configs)
+    backend = os.environ.get("REPRO_EVENT_BACKEND", "single_heap")
     for name in ("steady", "flash_crowd", "daily_cycle", "multi_tenant"):
         wl = build_scenario(name, duration_s=10.0, seed=3)
         store = ConfigStore()
         install_demo_configs(store, wl)
         sim = Simulator(build_tree(16, fanout=4), store,
-                        SyntheticServiceModel(seed=2), seed=7)
+                        SyntheticServiceModel(seed=2), seed=7,
+                        event_backend=backend)
         n = sim.load(wl)
         t0 = time.perf_counter()
         s = summarize(sim.run())
@@ -234,7 +239,8 @@ def bench_workload_scenarios():
                        mean_on_s=1.0, mean_off_s=3.0),
         profiles, duration_s=64.0, seed=3)
     sim = Simulator(build_tree(512, fanout=16), store,
-                    SyntheticServiceModel(seed=2), seed=7)
+                    SyntheticServiceModel(seed=2), seed=7,
+                    event_backend=backend)
     t0 = time.perf_counter()
     n = sim.load(wl)
     t_gen = time.perf_counter() - t0
@@ -337,6 +343,133 @@ def bench_placement():
              f"fn_p95_vs_slo={','.join(parts)};sim_wall_s={wall:.1f}")
 
 
+def bench_event_backends():
+    """ISSUE-5 acceptance probe: the standalone `EventEngine` under a
+    ≥10M-request event stream, once per registered backend.
+
+    The stream is the simulator's real shape: per-tenant Poisson arrival
+    streams bulk-loaded *stream by stream* (the Azure-trace multi-tenant
+    ingest order — globally near-random in time, which is a binary
+    heap's honest worst case: every sift walks ~log(10M) cache-hostile
+    levels of a shuffled gigabyte-scale array), then drained while each
+    arrival spawns the operational chain (enqueue +hop, finish +service,
+    idle_check +30s). The sharded calendar queue seals the bulk load
+    into sorted per-bucket runs and keeps dynamic events in small
+    cache-resident bucket heaps, so its advantage grows with pending-set
+    scale. Both backends must pop the identical (t, seq) stream — the
+    probe cross-checks a sampled hash.
+
+    End-to-end *simulator* events/s gains are smaller (~1.1-1.2x at 10M:
+    routing/dispatch/service handlers dominate the per-event cost and
+    are backend-independent); set EVENT_BACKEND_SIM_PROBE=1 to measure
+    and record that full-sim probe too (~25 min extra).
+    EVENT_BACKEND_PROBE_S (default 505) scales the horizon: 505 s ×
+    2000 streams × 10 rps ≈ 10.1M requests ≈ 40M events."""
+    import random as _random
+
+    from repro.core.events import EventEngine
+
+    hop_s, idle_s = 0.0005, 30.0
+
+    def engine_probe(backend, streams, duration_s):
+        eng = EventEngine(backend)
+        n = 0
+        t0 = time.perf_counter()
+        for s in range(streams):           # tenant-by-tenant bulk ingest
+            srng = _random.Random(100 + s)
+            t = 0.0
+            while True:
+                t += srng.expovariate(10.0)
+                if t >= duration_s:
+                    break
+                eng.push(t, "arrival", None)
+                n += 1
+        t_load = time.perf_counter() - t0
+        drng = _random.Random(7)
+        sample = 0
+        pops = 0
+        t0 = time.perf_counter()
+        while True:
+            e = eng.pop()
+            if e is None:
+                break
+            pops += 1
+            kind = e[2]
+            if kind == "arrival":
+                eng.push(e[0] + hop_s, "enqueue", None)
+            elif kind == "enqueue":
+                eng.push(e[0] + 0.004 + 0.01 * drng.random(), "finish", None)
+            elif kind == "finish":
+                eng.push(e[0] + idle_s, "idle_check", None)
+            if not pops % 997:             # cheap cross-backend witness
+                sample ^= hash((e[0], e[1]))
+        wall = time.perf_counter() - t0
+        return n, pops, t_load, wall, sample
+
+    dur = float(os.environ.get("EVENT_BACKEND_PROBE_S", "505"))
+    rates, hashes = {}, {}
+    for backend in ("single_heap", "sharded"):
+        engine_probe(backend, 200, 20.0)   # warmup: page/arena state
+        n, pops, t_load, wall, sample = engine_probe(backend, 2000, dur)
+        if dur >= 505:
+            assert n >= 10_000_000, \
+                f"acceptance probe must drive >=10M requests, got {n}"
+        rates[backend] = pops / wall
+        hashes[backend] = sample
+        _row(f"event_engine_{backend}", 1e6 * wall / n,
+             f"requests={n};events={pops};events_per_s={pops / wall:.0f};"
+             f"load_s={t_load:.1f};run_s={wall:.1f}")
+    assert hashes["sharded"] == hashes["single_heap"], \
+        "backends popped different (t, seq) streams"
+    _row("event_engine_speedup", 0.0,
+         f"sharded_over_single_heap="
+         f"{rates['sharded'] / rates['single_heap']:.2f}x")
+
+    if not os.environ.get("EVENT_BACKEND_SIM_PROBE"):
+        return
+
+    # ---- optional end-to-end probe: the full simulator at ≥10M requests
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import build_tree
+    from repro.core.simulator import Simulator, SyntheticServiceModel
+    from repro.core.types import FunctionConfig
+    from repro.workloads import (FunctionProfile, MixedWorkload,
+                                 PoissonArrivals, SizeDist)
+
+    def sim_probe(backend, duration_s):
+        store = ConfigStore()
+        store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=16,
+                                 cold_start_s=0.05, idle_timeout_s=30.0,
+                                 max_instances_per_worker=8))
+        wl = MixedWorkload(PoissonArrivals(20000.0),
+                           [FunctionProfile("fn", size=SizeDist.const(24))],
+                           duration_s=duration_s, seed=3)
+        sim = Simulator(build_tree(64, fanout=8, leaf_policy="random"),
+                        store, SyntheticServiceModel(seed=2), seed=7,
+                        event_backend=backend, collect_telemetry=False)
+        t0 = time.perf_counter()
+        n = sim.load(wl)
+        t_load = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sim.run()
+        wall = time.perf_counter() - t0
+        return n, sim, t_load, wall
+
+    sim_rates = {}
+    for backend in ("single_heap", "sharded"):
+        sim_probe(backend, 20.0)           # warmup
+        n, sim, t_load, wall = sim_probe(backend, dur)
+        fails = sum(not r.ok for r in sim.results)
+        sim_rates[backend] = sim.events_processed / wall
+        _row(f"event_backend_sim_{backend}", 1e6 * wall / n,
+             f"requests={n};events={sim.events_processed};"
+             f"events_per_s={sim.events_processed / wall:.0f};"
+             f"load_s={t_load:.1f};run_s={wall:.1f};fails={fails}")
+    _row("event_backend_sim_speedup", 0.0,
+         f"sharded_over_single_heap="
+         f"{sim_rates['sharded'] / sim_rates['single_heap']:.2f}x")
+
+
 def bench_sim_throughput():
     from repro.core.config_store import ConfigStore
     from repro.core.router import build_tree
@@ -380,7 +513,8 @@ def roofline_table():
 BENCHES = [bench_tree_scaling, bench_lb_policies, bench_concurrency,
            bench_emulation, bench_serving_engine, bench_kernels,
            bench_workload_scenarios, bench_autoscaler_scenarios,
-           bench_placement, bench_sim_throughput, roofline_table]
+           bench_placement, bench_event_backends, bench_sim_throughput,
+           roofline_table]
 
 
 def main() -> None:
@@ -394,9 +528,14 @@ def main() -> None:
         except Exception as e:  # keep the harness robust
             _row(b.__name__ + "_ERROR", 0.0, repr(e)[:120])
     os.makedirs(OUT_DIR, exist_ok=True)
-    out = os.path.join(OUT_DIR, f"results{'_' + only if only else ''}.json")
+    # REPRO_EVENT_BACKEND suffixes the artifact so CI's per-backend runs
+    # of the same bench don't overwrite each other
+    backend = os.environ.get("REPRO_EVENT_BACKEND")
+    suffix = (f"_{only}" if only else "") + (f"_{backend}" if backend else "")
+    out = os.path.join(OUT_DIR, f"results{suffix}.json")
     with open(out, "w") as fh:
-        json.dump({"filter": only, "rows": ROWS}, fh, indent=1)
+        json.dump({"filter": only, "backend": backend, "rows": ROWS}, fh,
+                  indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,378 @@
+"""The event engine: the simulator's hot loop, behind a narrow interface.
+
+The testbed's credibility rests on request volumes an order of magnitude
+beyond toy probes (SeBS; Barcelona-Pons & Garcia-Lopez both push past
+10M invocations), and at that scale the *event queue* — not the worker
+model — becomes the simulator's bottleneck: a single binary heap holding
+millions of pre-loaded arrivals pays O(log n) pointer-chasing tuple
+comparisons on every push and pop, over a working set far larger than
+cache. This module makes the queue a pluggable architectural axis, like
+LB policies, placers, and autoscalers:
+
+- :class:`EventEngine` — seq-stamping, pending-event accounting, and the
+  ``pop(until=...)`` peek-don't-requeue contract the simulator's
+  ``run(until)`` resume path relies on.
+- ``single_heap`` (:class:`SingleHeapQueue`) — one ``heapq``; byte
+  identical to the pre-split simulator (the golden-digest contract).
+- ``sharded`` (:class:`ShardedQueue`) — a calendar queue: time-bucketed
+  per-shard heaps drained in bucket order and merged by ``(t, seq)``.
+  Pre-loaded arrivals are staged and cut into per-bucket *sorted runs*
+  on first pop, so steady-state pops cost O(1)-ish comparisons against
+  a cache-hot bucket instead of O(log 10M) against the whole future.
+
+Determinism contract: every backend yields events in exactly ascending
+``(t, seq)`` order — the total order a single heap produces — so the
+same seed gives byte-identical results on *any* backend (enforced by
+``tests/test_events.py`` and the shared property driver in
+``tests/_prop_drivers.py``).
+
+Events are plain tuples ``(t, seq, kind, payload)``. ``seq`` is stamped
+by the engine from one monotone counter, which is what makes ``(t,
+seq)`` a total order: payloads are never compared.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Dict, List, Optional, Tuple
+
+Event = Tuple[float, int, str, object]
+
+EVENT_BACKENDS: Dict[str, Callable[..., "EventQueue"]] = {}
+
+
+def register_event_backend(cls):
+    """Class decorator: add an EventQueue backend to the registry."""
+    EVENT_BACKENDS[cls.kind] = cls
+    return cls
+
+
+def get_event_backend(name: str, **params) -> "EventQueue":
+    """Construct a registered event-queue backend by name."""
+    if name not in EVENT_BACKENDS:
+        raise KeyError(f"event backend {name!r} not registered "
+                       f"(have: {sorted(EVENT_BACKENDS)})")
+    return EVENT_BACKENDS[name](**params)
+
+
+def list_event_backends() -> List[str]:
+    return sorted(EVENT_BACKENDS)
+
+
+class EventQueue:
+    """Backend interface: a priority queue over ``(t, seq, ...)`` tuples.
+
+    ``push`` never compares payloads (``seq`` is unique), ``pop``/``peek``
+    surface the globally smallest ``(t, seq)`` entry. ``peek`` must not
+    remove — the engine's ``pop(until)`` peeks first so an event beyond
+    the horizon is simply *left in place* (no pop-and-requeue churn).
+    """
+
+    kind = "base"
+
+    def push(self, entry: Event) -> None:
+        raise NotImplementedError
+
+    def pop(self) -> Event:
+        raise NotImplementedError
+
+    def peek(self) -> Optional[Event]:
+        raise NotImplementedError
+
+    def pop_until(self, until: Optional[float]) -> Optional[Event]:
+        """Pop the head iff it lies at or before ``until`` (None = no
+        horizon); otherwise leave the queue untouched and return None.
+        One traversal on backends that override it — the engine's hot
+        path."""
+        entry = self.peek()
+        if entry is None or (until is not None and entry[0] > until):
+            return None
+        return self.pop()
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+
+@register_event_backend
+class SingleHeapQueue(EventQueue):
+    """One ``heapq`` over all pending events — the reference backend.
+
+    Exactly the pre-split simulator's queue: same tuples, same heap, same
+    pop order, so every golden digest recorded before the event-engine
+    refactor still matches byte for byte.
+    """
+
+    kind = "single_heap"
+
+    __slots__ = ("_heap",)
+
+    def __init__(self):
+        self._heap: list = []
+
+    def push(self, entry: Event) -> None:
+        heapq.heappush(self._heap, entry)
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def peek(self) -> Optional[Event]:
+        return self._heap[0] if self._heap else None
+
+    def pop_until(self, until: Optional[float]) -> Optional[Event]:
+        heap = self._heap
+        if not heap or (until is not None and heap[0][0] > until):
+            return None
+        return heapq.heappop(heap)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+@register_event_backend
+class ShardedQueue(EventQueue):
+    """Calendar queue: per-time-bucket shards merged by ``(t, seq)``.
+
+    Two regimes, matching how the simulator actually produces events:
+
+    - **Staged bulk load.** Everything pushed before the first pop (the
+      ``sim.load(workload)`` pattern: millions of arrivals, already in
+      nearly ascending time order) accumulates in a flat list. The first
+      pop *seals* the stage: one adaptive ``sort`` (Timsort is ~O(n) on
+      the nearly-sorted stream), a bucket width chosen so each shard
+      holds ~``target_per_bucket`` events, and a single pass cutting the
+      run into per-bucket sorted lists consumed by index — no heap
+      discipline needed for the entire pre-loaded future.
+    - **Dynamic events.** Pushes after sealing (finish/poke/enqueue at
+      near-``now`` times) go into the destination bucket's *overflow
+      heap*. Those heaps stay small — operational events cluster around
+      the present — so pushes and pops are a handful of comparisons
+      against cache-hot shards instead of O(log total-pending).
+
+    ``pop`` merges the current bucket's sorted run with its overflow
+    heap by ``(t, seq)`` and advances through buckets in index order;
+    since ``floor(t / width)`` is monotone in ``t``, the drain order is
+    exactly ascending ``(t, seq)`` — identical to the single heap. An
+    entry pushed behind the bucket currently draining (only possible for
+    ``t`` at the bucket boundary, or a caller scheduling in the past,
+    which the simulator never does) is clamped into the current bucket,
+    where ``(t, seq)`` ordering still places it correctly relative to
+    everything not yet popped.
+
+    When the queue fully drains it returns to staging mode, so a
+    drain-then-bulk-load cycle (``run()``, then another ``load()``)
+    re-tunes the bucket width to the new horizon.
+    """
+
+    kind = "sharded"
+
+    __slots__ = ("bucket_s", "target_per_bucket", "_staged", "_width",
+                 "_runs", "_heaps", "_active", "_cur", "_cur_end",
+                 "_cur_run", "_cur_pos", "_cur_heap", "_len")
+
+    def __init__(self, bucket_s: Optional[float] = None,
+                 target_per_bucket: int = 4096):
+        self.bucket_s = bucket_s           # None => size from staged span
+        self.target_per_bucket = target_per_bucket
+        self._staged: Optional[list] = []  # None once sealed
+        self._width = bucket_s or 0.01
+        self._runs: Dict[int, list] = {}   # future idx -> sorted staged slice
+        self._heaps: Dict[int, list] = {}  # future idx -> overflow heap
+        self._active: list = []            # heap of not-yet-drained idxs
+        # the bucket currently draining, held in slots so the hot pop
+        # path touches no dicts at all — and pushes into it take a
+        # single float compare (t < _cur_end), no division, no dicts
+        self._cur: Optional[int] = None
+        self._cur_end = -1e300             # (cur + 1) * width
+        self._cur_run: Optional[list] = None
+        self._cur_pos = 0
+        self._cur_heap: Optional[list] = None
+        self._len = 0
+
+    # ------------------------------------------------------------ internals
+    def _seal(self) -> None:
+        """Cut the staged bulk load into per-bucket sorted runs."""
+        staged = self._staged
+        self._staged = None
+        if not staged:
+            return
+        staged.sort()
+        if self.bucket_s is None:
+            span = staged[-1][0] - staged[0][0]
+            buckets = max(1, len(staged) // self.target_per_bucket)
+            self._width = max(span / buckets, 1e-9)
+        width = self._width
+        runs, active = self._runs, self._active
+        lo = 0
+        idx = int(staged[0][0] / width)
+        for i, entry in enumerate(staged):
+            j = int(entry[0] / width)
+            if j != idx:
+                runs[idx] = staged[lo:i]
+                active.append(idx)
+                lo, idx = i, j
+        runs[idx] = staged[lo:]
+        active.append(idx)
+        heapq.heapify(active)
+
+    def _head(self):
+        """(head entry, came-from-overflow-heap) for the next live bucket;
+        advances the current-bucket slots past exhausted buckets. The
+        caller has already checked ``_len > 0``."""
+        if self._staged is not None:
+            self._seal()
+        while True:
+            head = None
+            run = self._cur_run
+            if run is not None:
+                p = self._cur_pos
+                if p < len(run):
+                    head = run[p]
+                else:
+                    self._cur_run = None
+            heap = self._cur_heap
+            if heap:
+                h0 = heap[0]
+                if head is None or h0 < head:
+                    return h0, True
+                return head, False
+            if head is not None:
+                return head, False
+            # current bucket exhausted: load the next active one
+            cur = self._cur = heapq.heappop(self._active)
+            self._cur_end = (cur + 1) * self._width
+            self._cur_run = self._runs.pop(cur, None)
+            self._cur_pos = 0
+            self._cur_heap = self._heaps.pop(cur, None)
+
+    def _restage(self) -> None:
+        """Fully drained: return to staging so the next bulk load
+        re-tunes the bucket width to its own horizon."""
+        self._staged = []
+        self._runs.clear()
+        self._heaps.clear()
+        self._active.clear()
+        self._cur = None
+        self._cur_end = -1e300
+        self._cur_run = None
+        self._cur_pos = 0
+        self._cur_heap = None
+
+    # ------------------------------------------------------------- interface
+    def push(self, entry: Event) -> None:
+        self._len += 1
+        staged = self._staged
+        if staged is not None:
+            staged.append(entry)
+            return
+        if entry[0] < self._cur_end:
+            # the draining bucket — the overwhelmingly common case for
+            # operational (near-now) events. Past-t pushes clamp here
+            # too: ``(t, seq)`` ordering still places them correctly
+            # among the not-yet-popped entries.
+            heap = self._cur_heap
+            if heap is None:
+                self._cur_heap = [entry]
+            else:
+                heapq.heappush(heap, entry)
+            return
+        idx = int(entry[0] / self._width)
+        cur = self._cur
+        if cur is not None and idx <= cur:
+            # float-boundary guard: t >= _cur_end (a rounded product) can
+            # still floor-divide into the draining bucket's index; never
+            # re-activate a bucket at or behind the drain
+            idx = cur + 1
+        heaps = self._heaps
+        heap = heaps.get(idx)
+        if heap is None:
+            heaps[idx] = [entry]
+            if idx not in self._runs:
+                heapq.heappush(self._active, idx)
+            return
+        heapq.heappush(heap, entry)
+
+    def _take(self, entry: Event, from_heap: bool) -> Event:
+        self._len -= 1
+        if from_heap:
+            heap = self._cur_heap
+            heapq.heappop(heap)
+            if not heap:
+                self._cur_heap = None
+        else:
+            self._cur_pos += 1
+        if self._len == 0:
+            self._restage()
+        return entry
+
+    def pop(self) -> Event:
+        if self._len == 0:
+            raise IndexError("pop from an empty ShardedQueue")
+        entry, from_heap = self._head()
+        return self._take(entry, from_heap)
+
+    def pop_until(self, until: Optional[float]) -> Optional[Event]:
+        if self._len == 0:
+            return None
+        entry, from_heap = self._head()
+        if until is not None and entry[0] > until:
+            return None
+        return self._take(entry, from_heap)
+
+    def peek(self) -> Optional[Event]:
+        if self._len == 0:
+            return None
+        return self._head()[0]
+
+    def __len__(self) -> int:
+        return self._len
+
+
+class EventEngine:
+    """Seq-stamping event queue over a pluggable backend.
+
+    The engine owns the one monotone ``seq`` counter (what makes ``(t,
+    seq)`` a total order across backends) and the pending-event
+    accounting the simulator's termination logic reads: kinds listed in
+    ``background`` (the autoscaler's self-re-arming tick) are excluded
+    from :attr:`pending_real`, so a control loop can ask "is there real
+    work left?" without scanning the queue.
+
+    ``pop(until=...)`` peeks before popping: an event beyond the horizon
+    is *left in the queue* untouched — same ``(t, seq)``, no
+    pop-and-requeue round trip — which is what makes a segmented
+    ``run(until=...); run()`` byte-identical to one straight ``run()``
+    (including ``events_processed``; pinned by
+    ``tests/test_events.py``).
+    """
+
+    def __init__(self, backend="single_heap", *,
+                 background: Tuple[str, ...] = (), **backend_kw):
+        self.queue: EventQueue = (get_event_backend(backend, **backend_kw)
+                                  if isinstance(backend, str) else backend)
+        self.backend = self.queue.kind
+        self.background = frozenset(background)
+        self.pending_real = 0              # pending events minus background
+        self._seq = 0
+
+    def push(self, t: float, kind: str, payload) -> None:
+        if kind not in self.background:
+            self.pending_real += 1
+        seq = self._seq
+        self._seq = seq + 1
+        self.queue.push((t, seq, kind, payload))
+
+    def pop(self, until: Optional[float] = None) -> Optional[Event]:
+        """Next event in ``(t, seq)`` order, or None if the queue is
+        empty or the next event lies beyond ``until`` (left in place)."""
+        entry = self.queue.pop_until(until)
+        if entry is None:
+            return None
+        if entry[2] not in self.background:
+            self.pending_real -= 1
+        return entry
+
+    def peek_t(self) -> Optional[float]:
+        entry = self.queue.peek()
+        return entry[0] if entry is not None else None
+
+    def __len__(self) -> int:
+        return len(self.queue)

@@ -1,11 +1,26 @@
 """Deterministic discrete-event simulator for the HyperFaaS testbed.
 
 This is what lets the platform be *studied under massive load* (paper §I):
-thousands of (emulated) workers, millions of requests, virtual time. The same
-router tree / config store / concurrency policies run here as in the real
-in-process engine (``repro.serving.engine``); only the worker execution is
-replaced by a service-time model — either a synthetic profile or the learned
-RQ-B worker model (paper Fig. 2 step 3).
+thousands of (emulated) workers, tens of millions of requests, virtual
+time. The same router tree / config store / concurrency policies run here
+as in the real in-process engine (``repro.serving.engine``); only the
+worker execution is replaced by a service-time model — either a synthetic
+profile or the learned RQ-B worker model (paper Fig. 2 step 3).
+
+The simulator itself is thin *wiring* over three swappable layers:
+
+- **Event engine** (``repro.core.events``) — the hot loop's priority
+  queue behind a backend registry: ``single_heap`` (byte-identical
+  reference) or ``sharded`` (calendar queue for ≥10M-request probes).
+  Pick with ``Simulator(event_backend="sharded")``.
+- **Worker runtime** (``repro.core.worker``) — per-node dispatch,
+  admission, service start/completion, driven through the
+  ``_dispatch`` / ``_maybe_start_instance`` / ``_start_service`` hook
+  seam on this class (tests and custom platforms intercept there).
+- **Control plane** (``repro.autoscale.control``) — autoscaler binding,
+  per-function prewarm/reap, placer-ranked placement, and the
+  byte-stable placement/routing decision logs; ``sim.prewarm`` etc.
+  delegate to it.
 
 Fault tolerance features exercised here: worker fail/recover injection,
 per-worker straggler slowdowns, hedged requests (tail mitigation), queue
@@ -13,17 +28,16 @@ timeouts, and live add/remove of tree branches (elastic scaling).
 """
 from __future__ import annotations
 
-import heapq
 import itertools
 import random
 from typing import Dict, List, Optional
 
 from repro.core.config_store import ConfigStore
-from repro.core.placement import Placer, get_placer
+from repro.core.events import EventEngine
 from repro.core.router import LBNode, StateView, WorkerState
-from repro.core.scheduling import (UNLIMITED_SLOTS, FnQueues,
-                                   FunctionReplicaSet, Instance)
+from repro.core.scheduling import Instance
 from repro.core.types import FunctionConfig, Request, RequestResult, TelemetryRecord
+from repro.core.worker import Worker, WorkerRuntime
 
 
 # ---------------------------------------------------------------------------
@@ -67,118 +81,33 @@ def _tree_uses_fn_state(node) -> bool:
             or any(_tree_uses_fn_state(c) for c in node.children))
 
 
+def _tree_all_stateless(node) -> bool:
+    """True when no policy anywhere in the tree reads WorkerState — the
+    simulator can then skip state publication entirely (stateless
+    platforms shouldn't pay for state freshness; paper §II)."""
+    from repro.core.router import STATELESS
+    return (node.policy_name in STATELESS
+            and all(_tree_all_stateless(c) for c in node.children))
+
+
 def _tree_uses_deadline(node) -> bool:
     return (node.policy_name in _DEADLINE_POLICIES
             or any(_tree_uses_deadline(c) for c in node.children))
 
-# Re-exported for callers that patched/inspected the old private name.
+# Re-exported for callers that patched/inspected the old private names
+# (the classes themselves now live in ``repro.core.worker`` /
+# ``repro.core.scheduling``; these aliases are the same objects, so
+# monkeypatching through them still hits every code path).
 _Instance = Instance
-
-
-class _Worker:
-    """One node: per-function replica sets + per-function FIFO queues,
-    indexed so every hot-path read is O(affected function). Memory and
-    slot totals are tracked incrementally (never recomputed by scanning
-    instances) so the placement layer and ``slots_total`` are O(1)."""
-
-    def __init__(self, name: str, capacity_slots: int = 16,
-                 memory_mb: Optional[float] = None):
-        self.name = name
-        self.capacity_slots = capacity_slots   # hardware concurrency of node
-        self.memory_mb = memory_mb             # replica memory cap (None=inf)
-        self.memory_used_mb = 0.0              # incremental footprint
-        self.slowdown = 1.0                    # straggler factor
-        self.healthy = True
-        self.replica_sets: Dict[str, FunctionReplicaSet] = {}
-        self.iid_index: Dict[str, Instance] = {}   # iid -> live instance
-        self.total_instances = 0
-        self._inflight = 0                 # incremental busy-slot count
-        self._slots_total = 0              # incremental slots_total counter
-        self.queue = FnQueues()
-        self.busy_time = 0.0
-        self.cold_starts = 0
-        self.instances_started = 0
-        self.poke_times: set = set()       # dedupe scheduled pokes
-
-    @property
-    def instances(self) -> Dict[str, List[Instance]]:
-        """Legacy fn -> instance-list view (tests/examples read this)."""
-        return {fn: rs.instances for fn, rs in self.replica_sets.items()
-                if rs.instances}
-
-    @staticmethod
-    def _slot_contrib(inst: Instance) -> int:
-        # an unlimited-concurrency instance (slots == 0) counts its live
-        # occupancy (min 1) — matches the old flat recomputation exactly
-        return inst.slots if inst.slots > 0 else max(inst.busy, 1)
-
-    def add_instance(self, inst: Instance) -> None:
-        rs = self.replica_sets.get(inst.fn)
-        if rs is None:
-            rs = self.replica_sets[inst.fn] = FunctionReplicaSet(inst.fn)
-        rs.add(inst)
-        self.iid_index[inst.iid] = inst
-        self.total_instances += 1
-        self.memory_used_mb += inst.memory_mb
-        self._slots_total += self._slot_contrib(inst)
-
-    def remove_instance(self, inst: Instance) -> None:
-        self.replica_sets[inst.fn].discard(inst)
-        self.iid_index.pop(inst.iid, None)
-        self.total_instances -= 1
-        self.memory_used_mb -= inst.memory_mb
-        self._slots_total -= self._slot_contrib(inst)
-
-    def clear_instances(self) -> None:
-        self.replica_sets.clear()
-        self.iid_index.clear()
-        self.total_instances = 0
-        self.memory_used_mb = 0.0
-        self._inflight = 0
-        self._slots_total = 0
-
-    def note_busy(self, inst: Instance, delta: int) -> None:
-        """Move an instance's busy count, keeping ``_slots_total`` exact:
-        a slots==0 instance contributes ``max(busy, 1)``, so its share
-        shifts as occupancy changes."""
-        self._inflight += delta
-        if inst.slots > 0:
-            inst.busy += delta
-            return
-        before = max(inst.busy, 1)
-        inst.busy += delta
-        self._slots_total += max(inst.busy, 1) - before
-
-    def fits(self, memory_mb: float) -> bool:
-        """Memory admission for one more ``memory_mb`` replica."""
-        return (self.memory_mb is None
-                or self.memory_used_mb + memory_mb <= self.memory_mb + 1e-9)
-
-    def mem_free_mb(self) -> float:
-        return (float("inf") if self.memory_mb is None
-                else self.memory_mb - self.memory_used_mb)
-
-    def fn_replicas(self, fn: str) -> int:
-        rs = self.replica_sets.get(fn)
-        return len(rs.instances) if rs is not None else 0
-
-    def warm_fns(self) -> frozenset:
-        return frozenset(fn for fn, rs in self.replica_sets.items()
-                         if rs.instances)
-
-    def inflight(self) -> int:
-        return self._inflight
-
-    def slots_total(self) -> int:
-        return self._slots_total or 1
-
-    def fn_free_slots(self, now: float) -> Dict[str, int]:
-        """Per-function immediately-usable warm slots (router signal)."""
-        return {fn: rs.ready_free_slots(now)
-                for fn, rs in self.replica_sets.items() if rs.instances}
+_Worker = Worker
 
 
 class Simulator:
+    #: every event kind the run loop dispatches (bound once per run())
+    _EVENT_KINDS = ("arrival", "enqueue", "reroute", "maybe_hedge", "fail",
+                    "recover", "poke", "finish", "idle_check",
+                    "autoscale_tick")
+
     def __init__(self, tree: LBNode, store: ConfigStore, service_model, *,
                  seed: int = 0, state_staleness_s: float = 0.0,
                  hedge_after_s: Optional[float] = None,
@@ -187,7 +116,9 @@ class Simulator:
                  worker_capacity_slots: int = 16,
                  worker_memory_mb: Optional[float] = None,
                  placer="first_fit",
-                 record_decisions: bool = False):
+                 record_decisions: bool = False,
+                 event_backend="single_heap",
+                 collect_telemetry: bool = True):
         self.tree = tree
         self.store = store
         self.model = service_model
@@ -201,17 +132,26 @@ class Simulator:
         # admission passes and behaviour is byte-identical to the
         # pre-placement simulator (pinned in tests/test_placement.py)
         self.worker_memory_mb = worker_memory_mb
-        self.placer: Placer = (get_placer(placer) if isinstance(placer, str)
-                               else placer)
-        self._record = record_decisions
-        self.placement_records: List[str] = []   # start/reap/idle events
-        self.routing_records: List[str] = []     # arrival/reroute choices
-        self.workers: Dict[str, _Worker] = {
-            w: _Worker(w, capacity_slots=worker_capacity_slots,
-                       memory_mb=worker_memory_mb)
+        # control plane (autoscaler + placement + decision logs) — lazy
+        # import so the core layer has no hard autoscale dependency
+        from repro.autoscale.control import ControlPlane
+        self.control = ControlPlane(self, placer=placer,
+                                    record_decisions=record_decisions)
+        self.runtime = WorkerRuntime(self)
+        # telemetry rows cost real memory at 10M+ requests; lite probes
+        # (benchmarks/run.py bench_event_backends) turn them off — the
+        # flag changes no event ordering and consumes no RNG
+        self.collect_telemetry = collect_telemetry
+        self.workers: Dict[str, Worker] = {
+            w: Worker(w, capacity_slots=worker_capacity_slots,
+                      memory_mb=worker_memory_mb)
             for w in tree.all_workers()}
         self._worker_list = list(self.workers)   # cache (rebuilt on add/remove)
         self._healthy_count = len(self.workers)  # incremental: O(1) arrivals
+        # a fully stateless tree never reads WorkerState rows: skip
+        # publication (routing results are unaffected — nothing consumes
+        # the rows — and no RNG or event ordering is touched)
+        self._view_needed = not _tree_all_stateless(tree)
         self._fn_view_needed = _tree_uses_fn_state(tree)
         self._branch_view_needed = False  # aggregate leaf rows for inner LBs
         self._leaf_members: Dict[str, List[str]] = {}
@@ -221,13 +161,18 @@ class Simulator:
         self._node_dirty: set = set()
         self._node_cache: Dict[str, WorkerState] = {}
         self._node_cache_stale_t = -1e30   # stale-snapshot rotation stamp
+        # dirty-lazy leaf rows (staleness == 0 fast path): leaf -> time of
+        # its last member event / aggregation version / cached row
+        self._leaf_dirty_t: Dict[str, float] = {}
+        self._leaf_ver: Dict[str, int] = {}
+        self._leaf_cache: Dict[str, tuple] = {}
         self._rebuild_leaf_index()
         if _tree_uses_deadline(tree):
             self._enable_service_est()
-        self._draining: Dict[str, _Worker] = {}  # removed, in-flight finishing
-        self._events: list = []
-        self._pending_real = 0       # events besides autoscale_tick in queue
-        self._seq = itertools.count()
+        self._draining: Dict[str, Worker] = {}  # removed, in-flight finishing
+        self.engine = EventEngine(event_backend,
+                                  background=("autoscale_tick",))
+        self._push = self.engine.push      # hot path: skip a delegation hop
         self._iid = itertools.count()
         self.now = 0.0
         self.events_processed = 0
@@ -238,14 +183,52 @@ class Simulator:
         self.telemetry: List[TelemetryRecord] = []
         self._finished: set = set()
         self._fn_cost: Dict[str, float] = {}
-        self.autoscaler = None
+
+    # --------------------------------------------------- control-plane API
+    # Thin delegates: the logic lives on repro.autoscale.control.ControlPlane
+    # (sim.control); these names are the stable public surface.
+    @property
+    def placer(self):
+        return self.control.placer
+
+    @property
+    def autoscaler(self):
+        return self.control.autoscaler
+
+    @property
+    def placement_records(self) -> List[str]:
+        return self.control.placement_records
+
+    @property
+    def routing_records(self) -> List[str]:
+        return self.control.routing_records
+
+    def placement_log(self) -> str:
+        return self.control.placement_log()
+
+    def routing_log(self) -> str:
+        return self.control.routing_log()
+
+    def prewarm(self, worker: str, fn: str) -> bool:
+        return self.control.prewarm(worker, fn)
+
+    def reap(self, worker: str, fn: str) -> bool:
+        return self.control.reap(worker, fn)
+
+    def place_prewarm(self, fn: str) -> Optional[str]:
+        return self.control.place_prewarm(fn)
+
+    def place_reap(self, fn: str) -> Optional[str]:
+        return self.control.place_reap(fn)
+
+    def attach_autoscaler(self, scaler, *, first_tick_s: float = None):
+        return self.control.attach_autoscaler(scaler,
+                                              first_tick_s=first_tick_s)
+
+    def _log_placement(self, kind: str, w: Worker, fn: str) -> None:
+        self.control.log_placement(kind, w, fn)
 
     # ----------------------------------------------------------- event API
-    def _push(self, t: float, kind: str, payload):
-        if kind != "autoscale_tick":
-            self._pending_real += 1
-        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
-
     def submit(self, req: Request):
         self._push(req.arrival_t, "arrival", req)
 
@@ -256,15 +239,18 @@ class Simulator:
     def set_straggler(self, worker: str, factor: float):
         self.workers[worker].slowdown = factor
 
+    # ------------------------------------------------------------ topology
     def add_branch(self, node: LBNode):
         self.tree.add_branch(node)
         for w in node.all_workers():
-            self.workers[w] = _Worker(
+            self.workers[w] = Worker(
                 w, capacity_slots=self.worker_capacity_slots,
                 memory_mb=self.worker_memory_mb)
         self._worker_list = list(self.workers)
         self._recount_healthy()
         self._rebuild_leaf_index()
+        self._view_needed = (self._view_needed
+                             or not _tree_all_stateless(node))
         self._fn_view_needed = (self._fn_view_needed
                                 or _tree_uses_fn_state(node))
         if _tree_uses_deadline(node):
@@ -298,51 +284,7 @@ class Simulator:
         self._healthy_count = sum(
             1 for w in self._worker_list if self.workers[w].healthy)
 
-    def prewarm(self, worker: str, fn: str) -> bool:
-        """Proactively start (cold-start now, serve warm later) one
-        instance of ``fn`` on a worker — the autoscaler's scale-up
-        companion. Returns False if the worker is gone/unhealthy or at
-        instance capacity."""
-        w = self.workers.get(worker)
-        if w is None or not w.healthy:
-            return False
-        cfg = self.store.get(fn)
-        inst = self._maybe_start_instance(w, cfg)
-        if inst is None:
-            return False
-        # instances normally get idle_checks from _on_finish; a prewarmed
-        # instance that never serves traffic needs its own reap path or it
-        # would pin a capacity slot forever
-        self._push(inst.ready_t + cfg.idle_timeout_s, "idle_check",
-                   (worker, inst.iid))
-        # a prewarm onto a worker already holding queued work for this fn
-        # must wake its dispatch when the replica is ready, or that work
-        # only drains on the next unrelated enqueue/finish
-        if w.queue.depth(fn) > 0:
-            self._poke(w, inst.ready_t)
-        return True
-
-    def reap(self, worker: str, fn: str) -> bool:
-        """Stop one idle warm instance of ``fn`` on a worker — the
-        autoscaler's per-function scale-down companion to :meth:`prewarm`.
-        Returns False if the worker is gone/unhealthy or holds no idle
-        ready replica of that function."""
-        w = self.workers.get(worker)
-        if w is None or not w.healthy:
-            return False
-        rs = w.replica_sets.get(fn)
-        inst = rs.idle_ready(self.now) if rs is not None else None
-        if inst is None:
-            return False
-        w.remove_instance(inst)
-        if self._record:
-            self._log_placement("reap", w, fn)
-        if len(w.queue) > 0:       # freed capacity may unblock other fns
-            self._dispatch(w)
-        else:
-            self._refresh_view(w)
-        return True
-
+    # ------------------------------------------------- state-view publication
     def _enable_service_est(self):
         """Attach the windowed service-time estimator deadline-aware
         routing prices backlogs with (idempotent; lazy import keeps the
@@ -359,8 +301,8 @@ class Simulator:
 
     def _rebuild_leaf_index(self):
         """Worker -> leaf / inner-ancestor maps for branch-level state
-        rows (leaf rows are refreshed eagerly; inner-node rows resolve
-        lazily through ``_resolve_node_state``)."""
+        rows (leaf rows resolve dirty-lazily through
+        ``_resolve_node_state``; inner-node rows likewise)."""
         self._leaf_members = {}
         self._leaf_of = {}
         self._node_workers = {}
@@ -380,15 +322,29 @@ class Simulator:
         self._worker_ancestors = {w: sorted(a) for w, a in ancestors.items()}
         self._node_dirty = set(self._node_workers)
         self._node_cache = {}
+        # leaves that survived a topology change keep their rows (the
+        # eager scheme kept them in the StateView across rebuilds)
+        live = self._leaf_members
+        self._leaf_dirty_t = {k: v for k, v in self._leaf_dirty_t.items()
+                              if k in live}
+        self._leaf_ver = {k: v for k, v in self._leaf_ver.items() if k in live}
+        self._leaf_cache = {k: v for k, v in self._leaf_cache.items()
+                            if k in live}
 
-    def _aggregate_state(self, name: str, members) -> WorkerState:
+    def _aggregate_state(self, name: str, members,
+                         now: Optional[float] = None) -> WorkerState:
         """One aggregated WorkerState row over a set of *live* workers so
         stateful branch-level policies (deadline_aware) can score whole
         leaf branches: sums for queue/inflight/capacity, unions for warm
         sets, and the *best* free memory (a cold start needs one worker
-        that fits, not average headroom). Inner-node rows use the
+        that fits, not average headroom). ``now`` prices warm-slot
+        readiness: the dirty-lazy leaf path passes the leaf's last
+        member-event time so a deferred aggregation reproduces the
+        eagerly-refreshed row byte-for-byte. Inner-node rows use the
         row-based (staleness-respecting) variant in
         ``_resolve_node_state``."""
+        if now is None:
+            now = self.now
         q = infl = cap = 0
         qd: Dict[str, int] = {}
         fs: Dict[str, int] = {}
@@ -409,7 +365,7 @@ class Simulator:
             warm.update(w.warm_fns())
             for fn, n in w.queue.depths().items():
                 qd[fn] = qd.get(fn, 0) + n
-            for fn, n in w.fn_free_slots(self.now).items():
+            for fn, n in w.fn_free_slots(now).items():
                 fs[fn] = fs.get(fn, 0) + n
         return WorkerState(
             worker=name, queue_len=q, inflight=infl, capacity=cap,
@@ -422,14 +378,35 @@ class Simulator:
             self.now)
 
     def _resolve_node_state(self, name: str, t: float):
-        """StateView fallback for *inner* (non-leaf) node names: deeper
-        trees route deadline_aware above the leaf level too, and those
-        nodes have no eagerly-refreshed row. Aggregates the members'
-        per-worker *view rows* — not live workers — so upper-level
-        scoring sees exactly the staleness the StateView models; cached
-        until a member refreshes (dirty-tracked in ``_refresh_view``) or
-        the stale snapshot rotates. 2-level trees, whose scored children
-        are all leaves, never pay for any of this."""
+        """StateView fallback for branch-level node names.
+
+        *Leaf* rows are dirty-lazy (ISSUE-5 satellite): a member event
+        only stamps the leaf's dirty time; the O(leaf_size × fns)
+        aggregation is deferred to the next routing read and cached
+        until the next member event. Aggregating the *live* members at
+        the recorded dirty time reproduces exactly what the old eager
+        refresh computed then — worker state only changes on member
+        events (the one exception, a control-plane ``prewarm`` between
+        member events, becomes visible one read earlier, which is
+        strictly fresher information). A leaf with no member event yet
+        resolves to None (the blind default), as under the eager scheme.
+
+        *Inner* (non-leaf) names aggregate the members' per-worker *view
+        rows* — not live workers — so upper-level scoring sees exactly
+        the staleness the StateView models; cached until a member
+        refreshes (dirty-tracked in ``_refresh_view``) or the stale
+        snapshot rotates. 2-level trees, whose scored children are all
+        leaves, never pay for the inner-node machinery."""
+        dirty_t = self._leaf_dirty_t.get(name)
+        if dirty_t is not None:
+            ver = self._leaf_ver[name]
+            cached = self._leaf_cache.get(name)
+            if cached is not None and cached[0] == ver:
+                return cached[1]
+            row = self._aggregate_state(
+                name, self._leaf_members.get(name, ()), now=dirty_t)
+            self._leaf_cache[name] = (ver, row)
+            return row
         members = self._node_workers.get(name)
         if members is None:
             return None
@@ -465,66 +442,38 @@ class Simulator:
             self._node_dirty.discard(name)
         return self._node_cache[name]
 
-    # ------------------------------------------------------------ placement
-    def _log_placement(self, kind: str, w: _Worker, fn: str) -> None:
-        cap = "inf" if w.memory_mb is None else f"{w.memory_mb:.0f}"
-        self.placement_records.append(
-            f"t={self.now:.6f} {kind} fn={fn} worker={w.name} "
-            f"mem={w.memory_used_mb:.0f}/{cap} inst={w.total_instances}")
+    def _refresh_view(self, w: Worker):
+        if not self._view_needed:    # stateless tree: nothing reads rows
+            return
+        if self._fn_view_needed:     # only per-fn routing pays for the dicts
+            state = WorkerState(
+                worker=w.name, queue_len=len(w.queue), inflight=w.inflight(),
+                capacity=w.slots_total(), warm_fns=w.warm_fns(),
+                healthy=w.healthy, fn_queue=w.queue.depths(),
+                fn_free_slots=w.fn_free_slots(self.now),
+                mem_free_mb=w.mem_free_mb())
+        else:
+            state = WorkerState(
+                worker=w.name, queue_len=len(w.queue), inflight=w.inflight(),
+                capacity=w.slots_total(), warm_fns=w.warm_fns(),
+                healthy=w.healthy)
+        self.view.update(state, self.now)
+        if self._branch_view_needed:
+            leaf = self._leaf_of.get(w.name)
+            if leaf is not None:
+                if self.view.staleness_s > 0:
+                    # the stale-snapshot rotation needs leaf rows stored
+                    # in the StateView; keep the eager refresh here (the
+                    # dirty-lazy path models staleness == 0 only)
+                    self._refresh_branch_view(leaf)
+                else:
+                    self._leaf_dirty_t[leaf] = self.now
+                    self._leaf_ver[leaf] = self._leaf_ver.get(leaf, 0) + 1
+            anc = self._worker_ancestors.get(w.name)
+            if anc:
+                self._node_dirty.update(anc)
 
-    def placement_log(self) -> str:
-        """Byte-stable placement decision log (``record_decisions=True``):
-        one line per replica start/reap/idle-stop, in event order."""
-        return "\n".join(self.placement_records)
-
-    def routing_log(self) -> str:
-        """Byte-stable routing decision log (``record_decisions=True``):
-        one line per arrival/reroute with the worker the tree chose."""
-        return "\n".join(self.routing_records)
-
-    def place_prewarm(self, fn: str) -> Optional[str]:
-        """Start one replica of ``fn`` on the worker the placer picks —
-        the autoscaler's scale-up entry into the placement layer.
-
-        Candidates are offered coldest-in-``fn`` first (fewest replicas
-        of the function, then fewest instances overall, then name — the
-        deterministic preference order the control loop always used);
-        the placer bin-packs within that order. Returns the worker name,
-        or None when no worker has memory/instance headroom."""
-        cfg = self.store.get(fn)
-        cands = sorted(
-            (self.workers[n] for n in self._worker_list
-             if n in self.workers),
-            key=lambda w: (w.fn_replicas(fn), w.total_instances, w.name))
-        for w in self.placer.place_order(fn, cfg.memory_mb, cands):
-            if self.prewarm(w.name, fn):
-                return w.name
-        return None
-
-    def place_reap(self, fn: str) -> Optional[str]:
-        """Stop one idle replica of ``fn`` off the worker the placer
-        picks (warmest-in-``fn`` candidates first) — the scale-down
-        mirror of :meth:`place_prewarm`. Returns the worker name, or
-        None when no worker holds an idle ready replica."""
-        cands = sorted(
-            (self.workers[n] for n in self._worker_list
-             if n in self.workers),
-            key=lambda w: (-w.fn_replicas(fn), w.name))
-        for w in self.placer.reap_order(fn, cands):
-            if self.reap(w.name, fn):
-                return w.name
-        return None
-
-    def attach_autoscaler(self, scaler, *, first_tick_s: float = None):
-        """Bind an ``repro.autoscale.Autoscaler`` and schedule its periodic
-        ``autoscale_tick`` control-loop event. Ticks re-arm themselves only
-        while other events remain, so ``run()`` still terminates."""
-        self.autoscaler = scaler
-        t0 = self.now + (scaler.interval_s if first_tick_s is None
-                         else first_tick_s)
-        self._push(t0, "autoscale_tick", None)
-        return scaler
-
+    # -------------------------------------------------------------- helpers
     def fn_cost(self, fn: str) -> float:
         if fn not in self._fn_cost:
             from repro.configs import get_config
@@ -542,49 +491,32 @@ class Simulator:
 
     # ---------------------------------------------------------------- run
     def run(self, until: Optional[float] = None):
-        while self._events:
-            t, seq, kind, payload = heapq.heappop(self._events)
-            if until is not None and t > until:
-                # re-queue so a later run() resumes without losing the event
-                heapq.heappush(self._events, (t, seq, kind, payload))
+        """Drive the event engine until empty (or past ``until``).
+
+        ``engine.pop(until)`` *peeks* before popping, so an event beyond
+        the horizon stays in the queue untouched — a segmented
+        ``run(until); run()`` is byte-identical to one straight ``run()``
+        including ``events_processed`` (pinned in tests/test_events.py);
+        there is no pop-and-requeue path left to double-count through."""
+        engine = self.engine
+        handlers = {k: getattr(self, "_on_" + k) for k in self._EVENT_KINDS}
+        get_handler = handlers.get
+        while True:
+            entry = engine.pop(until)
+            if entry is None:
                 break
-            if kind != "autoscale_tick":
-                self._pending_real -= 1
+            t, _seq, kind, payload = entry
             self.now = t
             self.events_processed += 1
-            getattr(self, f"_on_{kind}")(payload)
+            h = get_handler(kind)
+            if h is None:                  # custom kind pushed by a caller
+                h = handlers[kind] = getattr(self, "_on_" + kind)
+            h(payload)
         return self.results
 
     # ------------------------------------------------------------- events
-    def _refresh_view(self, w: _Worker):
-        if self._fn_view_needed:     # only per-fn routing pays for the dicts
-            state = WorkerState(
-                worker=w.name, queue_len=len(w.queue), inflight=w.inflight(),
-                capacity=w.slots_total(), warm_fns=w.warm_fns(),
-                healthy=w.healthy, fn_queue=w.queue.depths(),
-                fn_free_slots=w.fn_free_slots(self.now),
-                mem_free_mb=w.mem_free_mb())
-        else:
-            state = WorkerState(
-                worker=w.name, queue_len=len(w.queue), inflight=w.inflight(),
-                capacity=w.slots_total(), warm_fns=w.warm_fns(),
-                healthy=w.healthy)
-        self.view.update(state, self.now)
-        if self._branch_view_needed:
-            leaf = self._leaf_of.get(w.name)
-            if leaf is not None:
-                self._refresh_branch_view(leaf)
-            anc = self._worker_ancestors.get(w.name)
-            if anc:
-                self._node_dirty.update(anc)
-
     def _on_autoscale_tick(self, _payload):
-        if self.autoscaler is None:
-            return
-        self.autoscaler.on_tick(self)
-        if self._pending_real > 0:      # re-arm only while real work remains
-            self._push(self.now + self.autoscaler.interval_s,
-                       "autoscale_tick", None)
+        self.control.on_tick()
 
     def _on_arrival(self, req: Request):
         self.arrivals_seen += 1
@@ -606,32 +538,20 @@ class Simulator:
                        if self.workers[w].healthy]
             wid = self.rng.choice(healthy)
         if self._record:
-            self.routing_records.append(
-                f"t={self.now:.6f} arrival rid={req.rid} fn={req.fn} "
-                f"worker={wid}")
+            self.control.log_routing("arrival", req, wid)
         w = self.workers[wid]
         cfg = self.store.get(req.fn)
-        self.telemetry.append(TelemetryRecord(
-            fn=req.fn, t=self.now, queue_len=len(w.queue),
-            inflight=w.inflight(), batch_size=0, cold=False,
-            prompt_tokens=req.size, gen_tokens=cfg.gen_tokens,
-            fn_cost=self.fn_cost(req.fn), latency=0.0, ok=True))
-        req._telemetry_idx = len(self.telemetry) - 1
+        if self.collect_telemetry:
+            self.telemetry.append(TelemetryRecord(
+                fn=req.fn, t=self.now, queue_len=len(w.queue),
+                inflight=w.inflight(), batch_size=0, cold=False,
+                prompt_tokens=req.size, gen_tokens=cfg.gen_tokens,
+                fn_cost=self.fn_cost(req.fn), latency=0.0, ok=True))
+            req._telemetry_idx = len(self.telemetry) - 1
         req._worker = wid
         self._push(self.now + self.hop_s * hops, "enqueue", req)
         if self.hedge_after_s is not None and req.hedged_from is None:
             self._push(self.now + self.hedge_after_s, "maybe_hedge", req)
-
-    def _on_enqueue(self, req: Request):
-        w = self.workers.get(req._worker)
-        if w is None:                   # branch removed mid-hop: re-route
-            self._on_reroute(req)
-            return
-        if not w.healthy:
-            self._record_fail(req, "worker died")
-            return
-        w.queue.push(req, self.store.get(req.fn).timeout_s)
-        self._dispatch(w)
 
     def _on_reroute(self, req: Request):
         """Send a displaced request (its worker's branch was removed)
@@ -647,9 +567,7 @@ class Simulator:
                        if self.workers[w].healthy]
             wid = self.rng.choice(healthy)
         if self._record:
-            self.routing_records.append(
-                f"t={self.now:.6f} reroute rid={req.rid} fn={req.fn} "
-                f"worker={wid}")
+            self.control.log_routing("reroute", req, wid)
         req._worker = wid
         self._push(self.now + self.hop_s * hops, "enqueue", req)
 
@@ -683,265 +601,59 @@ class Simulator:
         w.healthy = True
         self._refresh_view(w)
 
-    # ----------------------------------------------------- worker mechanics
-    def _dispatch(self, w: _Worker):
-        """Serve a worker's backlog through the per-function index.
-
-        Queue timeouts are flushed from the deadline heap (the flat scan
-        checked every queued request each pass; the heap surfaces exactly
-        the expired ones, in the same arrival order). Then only functions
-        that can make progress are merge-scanned by global arrival
-        sequence, so a saturated function's whole backlog is skipped in
-        O(1) while cross-function service order — and hence the service
-        model's RNG stream — matches the flat scan byte-for-byte.
-        """
-        if not w.healthy:
-            return
-        # the flat scan passed the pre-scan queue length to the service
-        # model (the list was only compacted afterwards) — preserve that
-        qlen_at_scan = len(w.queue)
-        if w.queue.has_expired(self.now):
-            for req in w.queue.pop_expired(self.now):
-                self._record_fail(req, "queue timeout")
-        if len(w.queue):
-            self._merge_scan(w, qlen_at_scan)
-        self._refresh_view(w)
-
-    def _merge_scan(self, w: _Worker, qlen_at_scan: int):
-        now = self.now
-        q = w.queue
-        active = q.active_fns()
-        if len(active) == 1:           # overwhelmingly common: no merge
-            self._scan_one_fn(w, active[0], qlen_at_scan)
-            return
-        # per-fn scan state: [cfg, warming-free slots, kept prefix].
-        # Warming free slots are counted up front (as the flat scan did):
-        # queued requests wait on those before spawning more replicas
-        # (c=1 instances expose 0 extra slots, so Lambda-style
-        # one-instance-per-request behaviour is preserved). Free ready
-        # slots, warming slots, and instance-start headroom only shrink
-        # during the scan, so one fully-failed attempt proves every later
-        # same-fn attempt fails too: the function drops out of the merge.
-        state: dict = {}
-        heap = []
-        for fn in active:
-            head = q.scan_head(fn)
-            if head is None:
-                continue
-            rs = w.replica_sets.get(fn)
-            state[fn] = [self.store.get(fn), rs.warming_free(now)
-                         if rs is not None else 0, []]
-            heap.append((head._wseq, fn))
-        heapq.heapify(heap)
-        while heap:
-            _, fn = heapq.heappop(heap)
-            st = state[fn]
-            cfg, kept = st[0], st[2]
-            req = q.scan_head(fn)
-            q.pop_head(fn)
-            rs = w.replica_sets.get(fn)
-            inst = rs.pick(now) if rs is not None else None
-            saturated = False
-            if inst is not None:
-                q.mark_served(req)
-                self._start_service(w, inst, req, cfg, qlen_at_scan)
-            elif st[1] > 0:
-                st[1] -= 1                  # wait on a warming instance
-                self._poke(w, rs.next_ready_after(now))
-                kept.append(req)
-            else:
-                started = self._maybe_start_instance(w, cfg)
-                if started is None:
-                    kept.append(req)
-                    saturated = True
-                    self._maybe_poke_timeout(w, req, cfg)
-                elif started.ready_t <= now:
-                    # instant start (explicit cold_start_s=0.0): the new
-                    # replica is ready capacity, not warming — serve on
-                    # it directly (counting it as warming would strand a
-                    # later request waiting on a next_ready that never
-                    # comes)
-                    q.mark_served(req)
-                    self._start_service(w, started, req, cfg, qlen_at_scan)
-                else:
-                    st[1] += (started.slots if started.slots > 0
-                              else UNLIMITED_SLOTS) - 1
-                    self._poke(w, started.ready_t)
-                    kept.append(req)
-            if not saturated:
-                head = q.scan_head(fn)
-                if head is not None:
-                    heapq.heappush(heap, (head._wseq, fn))
-        for fn, st in state.items():
-            q.restore(fn, st[2])
-
-    def _scan_one_fn(self, w: _Worker, fn: str, qlen_at_scan: int):
-        """Heap-free scan when a single function holds all queued work —
-        FIFO order *is* global order, so semantics match the merge."""
-        now = self.now
-        q = w.queue
-        cfg = self.store.get(fn)
-        rs = w.replica_sets.get(fn)
-        warming = rs.warming_free(now) if rs is not None else 0
-        kept = []
-        while True:
-            req = q.scan_head(fn)
-            if req is None:
-                break
-            q.pop_head(fn)
-            inst = rs.pick(now) if rs is not None else None
-            if inst is not None:
-                q.mark_served(req)
-                self._start_service(w, inst, req, cfg, qlen_at_scan)
-                continue
-            if warming > 0:
-                warming -= 1                # wait on a warming instance
-                self._poke(w, rs.next_ready_after(now))
-                kept.append(req)
-                continue
-            started = self._maybe_start_instance(w, cfg)
-            if started is None:
-                kept.append(req)
-                self._maybe_poke_timeout(w, req, cfg)
-                break                       # saturated: rest stays queued
-            rs = w.replica_sets[fn]         # created on first start
-            if started.ready_t <= now:
-                # instant start (explicit cold_start_s=0.0): ready
-                # capacity, not warming — serve the trigger directly
-                q.mark_served(req)
-                self._start_service(w, started, req, cfg, qlen_at_scan)
-                continue
-            warming += (started.slots if started.slots > 0
-                        else UNLIMITED_SLOTS) - 1
-            self._poke(w, started.ready_t)
-            kept.append(req)
-        q.restore(fn, kept)
-
-    def _maybe_poke_timeout(self, w: _Worker, req: Request, cfg) -> None:
-        """A start refused for *memory* can be blocked permanently (no
-        finish/idle event need ever touch this worker again), which would
-        strand the queued request without even its timeout failure. Poke
-        the worker just past the request's queue deadline so the flush
-        runs. Slot-saturation refusals are excluded: they always clear
-        through a finish, and uncapped runs must stay byte-identical to
-        the pre-placement simulator."""
-        if not w.fits(cfg.memory_mb):
-            self._poke(w, req.arrival_t + cfg.timeout_s + 1e-6)
-
-    def _poke(self, w: "_Worker", t: float):
-        key = round(t, 9)
-        if key not in w.poke_times:
-            w.poke_times.add(key)
-            self._push(t, "poke", w.name)
+    # ------------------------------------------------- worker-runtime seam
+    # The mechanics live on repro.core.worker.WorkerRuntime (self.runtime);
+    # these methods are the override/patch seam — the runtime re-enters
+    # through them, so intercepting here catches every internal path.
+    def _on_enqueue(self, req: Request):
+        self.runtime.enqueue(req)
 
     def _on_poke(self, worker: str):
-        w = self.workers.get(worker)
-        if w is None:
-            return
-        w.poke_times.discard(round(self.now, 9))
-        self._dispatch(w)
-
-    def _maybe_start_instance(self, w: _Worker, cfg) -> Optional[Instance]:
-        rs = w.replica_sets.get(cfg.name)
-        if ((rs is not None and len(rs) >= cfg.max_instances_per_worker)
-                or w.total_instances >= w.capacity_slots
-                or not w.fits(cfg.memory_mb)):   # placement memory admission
-            return None
-        # an explicitly configured cold_start_s=0.0 means *instant*, only
-        # an unset (None) config falls back to the platform default
-        cold = (cfg.cold_start_s if cfg.cold_start_s is not None
-                else self.cold_default)
-        inst = Instance(iid=f"{w.name}/i{next(self._iid)}", fn=cfg.name,
-                        slots=cfg.concurrency,
-                        ready_t=self.now + cold * w.slowdown,
-                        last_used=self.now,
-                        memory_mb=cfg.memory_mb)
-        w.add_instance(inst)
-        w.cold_starts += 1
-        w.instances_started += 1
-        self.cold_starts_total += 1
-        if self._record:
-            self._log_placement("start", w, cfg.name)
-        return inst
-
-    def _start_service(self, w: _Worker, inst: Instance, req: Request, cfg,
-                       queue_len: int):
-        w.note_busy(inst, +1)
-        inst.last_used = self.now
-        cold = inst.ready_t > req.arrival_t
-        dur, ok = self.model.sample(
-            cfg, batch_size=inst.busy, queue_len=queue_len,
-            prompt=req.size, cold=cold, fn_cost=self.fn_cost(req.fn))
-        dur *= w.slowdown
-        # unlimited concurrency: utilization-triggered replica pre-start
-        if cfg.concurrency == 0:
-            util = inst.busy / max(cfg.max_instances_per_worker, 1)
-            if util > cfg.util_scale_threshold:
-                self._maybe_start_instance(w, cfg)
-        rec = self.telemetry[req._telemetry_idx]
-        rec.batch_size = inst.busy
-        rec.cold = cold
-        self._push(self.now + dur, "finish",
-                   (req, w.name, inst.iid, cold, self.now, ok))
-        w.busy_time += dur
+        self.runtime.on_poke(worker)
 
     def _on_finish(self, payload):
-        req, wname, iid, cold, start_t, ok = payload
-        draining = wname not in self.workers
-        # a drained-and-retired (or failed-then-removed) worker may be gone
-        # entirely; the result below must still be recorded either way
-        w = self._draining.get(wname) if draining else self.workers[wname]
-        inst = w.iid_index.get(iid) if w is not None else None
-        if inst is not None:               # O(1) via the iid index
-            w.note_busy(inst, -1)
-            inst.last_used = self.now
-            self._push(self.now + self.store.get(req.fn).idle_timeout_s,
-                       "idle_check", (wname, iid))
-        if draining and w is not None and w.inflight() == 0:
-            self._draining.pop(wname, None)   # retire even if hedge lost
+        self.runtime.finish(payload)
+
+    def _on_idle_check(self, payload):
+        self.runtime.idle_check(payload)
+
+    def _dispatch(self, w: Worker):
+        self.runtime.dispatch(w)
+
+    def _maybe_start_instance(self, w: Worker, cfg) -> Optional[Instance]:
+        return self.runtime.maybe_start_instance(w, cfg)
+
+    def _start_service(self, w: Worker, inst: Instance, req: Request, cfg,
+                       queue_len: int):
+        self.runtime.start_service(w, inst, req, cfg, queue_len)
+
+    def _poke(self, w: Worker, t: float):
+        self.runtime.poke(w, t)
+
+    # ------------------------------------------------------ result recording
+    def record_result(self, req: Request, *, start_t: float, ok: bool,
+                      cold: bool, worker: str, instance: str) -> bool:
+        """Record a completion for ``req`` (resolving hedge races to the
+        primary rid); returns False when a faster hedge already won."""
         # rid 0 is falsy, so `or` would misattribute a hedge of request 0
         primary = req.hedged_from if req.hedged_from is not None else req.rid
         if primary in self._finished:
-            return                       # hedge lost the race
+            return False                 # hedge lost the race
         self._finished.add(primary)
         res = RequestResult(rid=primary, fn=req.fn, ok=ok,
                             arrival_t=req.arrival_t, start_t=start_t,
                             finish_t=self.now, cold_start=cold,
-                            worker=wname, instance=iid)
+                            worker=worker, instance=instance)
         self.results.append(res)
         if self.view.estimator is not None and ok:
             # deadline routing prices backlogs with this windowed
             # observation; fed in result order, so it is deterministic
             self.view.estimator.observe(req.fn, res.service_time)
-        rec = self.telemetry[req._telemetry_idx]
-        rec.latency = res.latency
-        rec.ok = ok
-        if draining:                     # already retired above if empty
-            return
-        self._dispatch(w)
-
-    def _on_idle_check(self, payload):
-        wname, iid = payload
-        w = self.workers.get(wname)
-        if w is None:
-            # branch scaled away meanwhile, or the worker is draining in
-            # self._draining: draining workers only finish in-flight work,
-            # they never reap (pinned by tests/test_core_platform.py)
-            return
-        inst = w.iid_index.get(iid)        # O(1) via the iid index
-        if (inst is not None and inst.busy == 0 and
-                self.now - inst.last_used >=
-                self.store.get(inst.fn).idle_timeout_s - 1e-9):
-            w.remove_instance(inst)
-            if self._record:
-                self._log_placement("idle", w, inst.fn)
-            if len(w.queue) > 0:
-                # the freed capacity slot may unblock another function's
-                # backlog (the seed left such work stranded until the
-                # next unrelated enqueue/finish — or forever)
-                self._dispatch(w)
-                return
-        self._refresh_view(w)
+        if self.collect_telemetry:
+            rec = self.telemetry[req._telemetry_idx]
+            rec.latency = res.latency
+            rec.ok = ok
+        return True
 
     def _record_fail(self, req: Request, err: str):
         primary = req.hedged_from if req.hedged_from is not None else req.rid

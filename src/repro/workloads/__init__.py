@@ -7,6 +7,8 @@ from repro.workloads.arrivals import (ARRIVALS, ArrivalProcess,
                                       get_arrival, iats_from_times,
                                       read_trace, register_arrival,
                                       write_trace)
+from repro.workloads.azure import (azure_trace_arrivals, azure_trace_iats,
+                                   load_azure_trace, trace_functions)
 from repro.workloads.scenarios import (SCENARIOS, build_scenario,
                                        install_demo_configs, list_scenarios,
                                        register_scenario)
@@ -17,6 +19,8 @@ __all__ = [
     "ARRIVALS", "ArrivalProcess", "PoissonArrivals", "BurstyArrivals",
     "DiurnalArrivals", "TraceArrivals", "get_arrival", "register_arrival",
     "read_trace", "write_trace", "iats_from_times",
+    "load_azure_trace", "azure_trace_arrivals", "azure_trace_iats",
+    "trace_functions",
     "SCENARIOS", "build_scenario", "list_scenarios", "register_scenario",
     "install_demo_configs",
     "FunctionProfile", "MixedWorkload", "SizeDist",

@@ -120,13 +120,37 @@ def multi_tenant_memory(**overrides) -> MixedWorkload:
 
 
 @register_scenario("trace_replay")
-def trace_replay(*, path: str, fn: str = "fn",
+def trace_replay(*, path: str, fn: str = "fn", fmt: str = "iat",
                  duration_s: Optional[float] = None, loop: bool = False,
                  prompt_tokens: int = 16, seed: int = 1,
+                 function: Optional[str] = None, time_scale: float = 1.0,
+                 aggregate: bool = False,
                  rid_base: Optional[int] = 0) -> MixedWorkload:
-    """Replay a recorded IAT trace file exactly (Azure-Functions-style)."""
+    """Replay a recorded trace file exactly.
+
+    ``fmt="iat"`` reads one inter-arrival time per line; ``fmt="azure"``
+    ingests the Azure Functions public-trace CSV (per-minute invocation
+    counts) through ``repro.workloads.azure`` — pick a function by hash
+    prefix with ``function=``, replay the whole file's load shape with
+    ``aggregate=True``, and compress the traced day with ``time_scale``.
+    """
+    if fmt == "iat":
+        if function is not None or aggregate or time_scale != 1.0:
+            raise ValueError(
+                "function=/aggregate=/time_scale= only apply to the Azure "
+                "trace format — pass fmt='azure' (fmt='iat' would silently "
+                "replay the wrong stream)")
+        arrivals = TraceArrivals.from_file(path, loop=loop)
+    elif fmt == "azure":
+        from repro.workloads.azure import azure_trace_arrivals
+        arrivals = azure_trace_arrivals(path, function=function,
+                                        time_scale=time_scale,
+                                        aggregate=aggregate, loop=loop)
+    else:
+        raise ValueError(f"unknown trace format {fmt!r} "
+                         f"(have: 'iat', 'azure')")
     return MixedWorkload(
-        TraceArrivals.from_file(path, loop=loop),
+        arrivals,
         [FunctionProfile(fn, size=SizeDist.const(prompt_tokens))],
         duration_s=duration_s, seed=seed, rid_base=rid_base)
 

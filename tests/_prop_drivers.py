@@ -8,6 +8,7 @@ the same drivers in hypothesis ``@given(integers())`` so CI explores the
 seed space — one body, two harnesses, so the properties can never drift
 between the lanes.
 """
+import hashlib
 import itertools
 import random
 
@@ -15,6 +16,21 @@ from repro.core.scheduling import FnQueues, Instance
 from repro.core.types import Request
 
 FNS = ("a", "b", "c")
+
+
+def digest_sim(sim) -> str:
+    """sha256[:16] over a run's full result + telemetry streams — THE
+    byte-identity projection every golden/equivalence suite compares
+    (one definition, so the suites can never drift apart on which
+    fields "byte-identical" covers)."""
+    h = hashlib.sha256()
+    for r in sim.results:
+        h.update(repr((r.rid, r.fn, r.ok, r.arrival_t, r.start_t, r.finish_t,
+                       r.cold_start, r.worker, r.instance, r.error)).encode())
+    for t in sim.telemetry:
+        h.update(repr((t.fn, t.t, t.queue_len, t.inflight, t.batch_size,
+                       t.cold, t.latency, t.ok)).encode())
+    return h.hexdigest()[:16]
 
 
 def run_fnqueues_ops(seed: int, n_ops: int = 200) -> int:
@@ -116,6 +132,61 @@ def run_replica_index_ops(seed: int, n_ops: int = 150) -> int:
                         for i in live) or 1
         assert w.slots_total() == flat_slots
         assert w.inflight() == sum(i.busy for i in live)
+    return n_ops
+
+
+def run_event_backend_ops(seed: int, n_ops: int = 400) -> int:
+    """ISSUE-5 invariant: every event-queue backend drains an arbitrary
+    interleaved push/pop stream in identical ``(t, seq)`` order.
+
+    One :class:`~repro.core.events.EventEngine` per registered backend is
+    fed the same operation sequence (pushes at mixed horizons — near-now
+    jitter, mid-range, far future — the simulator's actual shape, plus a
+    bulk-load prefix to exercise the sharded backend's staged/sealed
+    regimes and ``pop(until)`` horizons); after every op all engines must
+    agree on the popped entries, the pending count, and the
+    pending-real accounting. Returns the number of ops checked."""
+    from repro.core.events import EventEngine, list_event_backends
+
+    rng = random.Random(seed)
+    engines = [EventEngine(b, background=("tick",))
+               for b in list_event_backends()]
+    ref = engines[0]
+    now = 0.0
+    # bulk-load prefix in nondecreasing time order (the sim.load pattern)
+    t = 0.0
+    for i in range(rng.randrange(0, 100)):
+        t += rng.random() * 0.2
+        kind = "tick" if rng.random() < 0.1 else "ev"
+        for e in engines:
+            e.push(t, kind, i)
+    for i in range(n_ops):
+        op = rng.random()
+        if op < 0.55:                                      # push
+            horizon = rng.choice([0.01, 0.5, 10.0, 1000.0])
+            tt = now + rng.random() * horizon
+            kind = "tick" if rng.random() < 0.1 else "ev"
+            for e in engines:
+                e.push(tt, kind, i)
+        elif op < 0.85:                                    # pop
+            popped = [e.pop() for e in engines]
+            assert all(p == popped[0] for p in popped), (seed, i, popped)
+            if popped[0] is not None:
+                now = max(now, popped[0][0])
+        else:                                              # pop with horizon
+            until = now + rng.random() * 5.0
+            popped = [e.pop(until=until) for e in engines]
+            assert all(p == popped[0] for p in popped), (seed, i, popped)
+            if popped[0] is not None:
+                now = max(now, popped[0][0])
+        assert all(len(e) == len(ref) for e in engines)
+        assert all(e.pending_real == ref.pending_real for e in engines)
+    while True:                                            # drain the rest
+        popped = [e.pop() for e in engines]
+        assert all(p == popped[0] for p in popped)
+        if popped[0] is None:
+            break
+    assert all(len(e) == 0 and e.pending_real == 0 for e in engines)
     return n_ops
 
 

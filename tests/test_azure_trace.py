@@ -1,0 +1,172 @@
+"""Azure Functions public-trace converter (ISSUE-5 satellite).
+
+Contracts: the CSV parser round-trips the checked-in fixture (header,
+comments, zero bins); minute counts expand to deterministic evenly
+spaced arrivals whose per-bin totals equal the trace; `time_scale`
+compresses wall time without changing counts; the `trace_replay`
+scenario ingests the format end-to-end through a seeded simulator with
+byte-identical request streams.
+"""
+import os
+
+import pytest
+
+from repro.workloads import build_scenario
+from repro.workloads.azure import (BIN_S, azure_trace_arrivals,
+                                   azure_trace_iats, load_azure_trace,
+                                   minute_counts_to_iats, select_function,
+                                   trace_functions)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "azure_sample.csv")
+
+
+# ------------------------------------------------------------------ parsing
+def test_load_fixture_rows():
+    rows = load_azure_trace(FIXTURE)
+    assert len(rows) == 3                  # header + comments skipped
+    by_owner = {r.owner for r in rows}
+    assert by_owner == {"ownerA", "ownerB"}
+    f = rows[0]
+    assert f.func.startswith("f3e2a1b4")
+    assert f.counts == (3, 0, 2, 0, 0, 5, 1, 0)
+    assert f.total == 11
+    assert f.key() == "f3e2a1b4"
+
+
+def test_load_rejects_malformed(tmp_path):
+    bad = tmp_path / "bad.csv"
+    bad.write_text("onlythree,cols,here\n")
+    with pytest.raises(ValueError):
+        load_azure_trace(str(bad))
+    empty = tmp_path / "empty.csv"
+    empty.write_text("# nothing but comments\n")
+    with pytest.raises(ValueError):
+        load_azure_trace(str(empty))
+
+
+def test_select_function_by_prefix_and_busiest():
+    rows = load_azure_trace(FIXTURE)
+    assert select_function(rows, "a1b2").trigger == "timer"
+    with pytest.raises(KeyError):
+        select_function(rows, "zzzz")
+    # busiest: queue fn has 12, chat-like http fn has 11
+    assert select_function(rows).func.startswith("9f8e7d6c")
+
+
+def test_trace_functions_index():
+    idx = trace_functions(FIXTURE)
+    assert idx == {"f3e2a1b4": 11, "a1b2c3d4": 4, "9f8e7d6c": 12}
+
+
+# -------------------------------------------------------------- expansion
+def test_minute_counts_expand_evenly_and_deterministically():
+    iats = minute_counts_to_iats([2, 0, 1])
+    # 2 arrivals centred in minute 0 -> 15s, 45s; 1 centred in minute 2
+    # -> 150s; IATs are the successive differences
+    assert iats == [15.0, 30.0, 105.0]
+    assert minute_counts_to_iats([2, 0, 1]) == iats     # pure function
+
+
+def test_per_bin_totals_match_trace():
+    rows = load_azure_trace(FIXTURE)
+    row = select_function(rows, "f3e2")
+    iats = azure_trace_iats(FIXTURE, function="f3e2")
+    assert len(iats) == row.total
+    t, seen = 0.0, [0] * len(row.counts)
+    for iat in iats:
+        t += iat
+        seen[int(t // BIN_S)] += 1
+    assert tuple(seen) == row.counts
+
+
+def test_time_scale_compresses_without_changing_counts():
+    full = azure_trace_iats(FIXTURE, function="f3e2")
+    fast = azure_trace_iats(FIXTURE, function="f3e2", time_scale=0.01)
+    assert len(full) == len(fast)
+    assert all(abs(a - b * 0.01) < 1e-9 for a, b in zip(fast, full))
+    with pytest.raises(ValueError):
+        azure_trace_iats(FIXTURE, time_scale=0.0)
+
+
+def test_aggregate_sums_all_functions():
+    iats = azure_trace_iats(FIXTURE, aggregate=True)
+    assert len(iats) == 11 + 4 + 12
+
+
+# ------------------------------------------------------------- end-to-end
+def test_trace_replay_scenario_ingests_azure_format():
+    wl = build_scenario("trace_replay", path=FIXTURE, fmt="azure",
+                        function="f3e2", time_scale=0.01, seed=5)
+    reqs = wl.generate()
+    assert len(reqs) == 11
+    assert reqs == wl.generate()           # seeded: byte-identical stream
+    assert [r.rid for r in reqs] == list(range(11))
+    # arrival times live inside the compressed 8-bin horizon
+    assert 0.0 < reqs[0].arrival_t < reqs[-1].arrival_t <= 8 * 60 * 0.01
+
+
+def test_trace_replay_scenario_runs_through_simulator():
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import build_tree
+    from repro.core.simulator import Simulator, SyntheticServiceModel
+    from repro.workloads import install_demo_configs
+
+    wl = build_scenario("trace_replay", path=FIXTURE, fmt="azure",
+                        aggregate=True, time_scale=0.01, seed=5)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_tree(2, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=7)
+    n = sim.load(wl)
+    res = sim.run()
+    assert n == 27 and len(res) == n
+
+
+def test_trace_replay_rejects_unknown_format():
+    with pytest.raises(ValueError):
+        build_scenario("trace_replay", path=FIXTURE, fmt="parquet")
+
+
+def test_arrivals_loop_tiles_the_trace():
+    arr = azure_trace_arrivals(FIXTURE, function="a1b2", time_scale=0.01,
+                               loop=True)
+    import random
+    times = []
+    for t in arr.times(10.0, random.Random(0)):
+        times.append(t)
+        if len(times) > 40:
+            break
+    assert len(times) > 4                  # looped past one trace pass
+    assert times == sorted(times)
+
+
+def test_loop_preserves_day_shape_and_rate(tmp_path):
+    """Code-review regression: a trace with traffic only early in the
+    day must NOT replay at a multiple of its traced rate when looped —
+    the cycle period is the full bin horizon, idle tail included."""
+    import random
+    csv = tmp_path / "sparse.csv"
+    # 60 invocations in minute 0 of a 10-minute trace: traced rate is
+    # 6/min averaged over the day, not 60/min
+    csv.write_text("o,a,f1f1f1f1,http,60,0,0,0,0,0,0,0,0,0\n")
+    arr = azure_trace_arrivals(str(csv), loop=True)
+    horizon = 3600.0                       # six 10-minute cycles
+    times = list(arr.times(horizon, random.Random(0)))
+    assert len(times) == 6 * 60            # not 3630 (prefix-only tiling)
+    # every arrival sits in the first minute of its own 600 s cycle
+    assert all((t % 600.0) < 60.0 for t in times)
+    assert abs(arr.mean_rate() - 60 / 600.0) < 1e-9
+
+
+def test_trace_replay_rejects_azure_kwargs_on_iat_format(tmp_path):
+    """Code-review regression: azure-only kwargs with the default
+    fmt='iat' must raise, not silently replay the wrong stream."""
+    iat = tmp_path / "t.iat"
+    iat.write_text("0.5\n0.5\n")
+    for kw in (dict(function="f3e2"), dict(aggregate=True),
+               dict(time_scale=0.01)):
+        with pytest.raises(ValueError):
+            build_scenario("trace_replay", path=str(iat), **kw)
+    # plain IAT replay still works
+    wl = build_scenario("trace_replay", path=str(iat), seed=1)
+    assert len(wl.generate()) == 2

@@ -200,15 +200,7 @@ def test_memory_capacity_never_exceeded_under_random_churn(trial):
 
 
 # -------------------------------------- golden: unlimited memory == PR 3
-def _digest(sim):
-    h = hashlib.sha256()
-    for r in sim.results:
-        h.update(repr((r.rid, r.fn, r.ok, r.arrival_t, r.start_t, r.finish_t,
-                       r.cold_start, r.worker, r.instance, r.error)).encode())
-    for t in sim.telemetry:
-        h.update(repr((t.fn, t.t, t.queue_len, t.inflight, t.batch_size,
-                       t.cold, t.latency, t.ok)).encode())
-    return h.hexdigest()[:16]
+from _prop_drivers import digest_sim as _digest  # noqa: E402  (shared def)
 
 
 FLASH = dict(duration_s=30.0, seed=3, base_rps=12.0, burst_rps=1000.0,
@@ -385,6 +377,69 @@ def test_branch_level_state_rows_published_for_deadline_trees():
     members = [sim.workers[w] for w in sim._leaf_members[leaf]]
     assert row.capacity == sum(w.slots_total() for w in members)
     assert row.mem_free_mb == max(w.mem_free_mb() for w in members)
+
+
+def test_leaf_rows_are_dirty_lazy_under_member_churn():
+    """ISSUE-5 satellite: the eager scheme re-aggregated a leaf's row —
+    O(leaf_size × fns) — on *every* member event. Leaf rows are now
+    dirty-lazy like inner-node rows: a member event only stamps the
+    leaf dirty; aggregation runs on the next routing *read* and is
+    cached until the next member event. A drain phase (in-flight work
+    finishing after the last arrival: plenty of member events, zero
+    routing reads) must therefore trigger zero aggregations, and a read
+    afterwards must still see the live aggregate."""
+    from repro.core import simulator as S
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=2,
+                             cold_start_s=0.05, memory_mb=256,
+                             idle_timeout_s=0.5))
+    sim = Simulator(
+        build_pool(2, 4, leaf_policy="deadline_aware",
+                   inner_policy="deadline_aware"),
+        store, SyntheticServiceModel(seed=2), seed=5,
+        worker_memory_mb=1024)
+    wl = build_scenario("steady", rps=400.0, duration_s=2.0, seed=4)
+    sim.load(wl)
+    sim.run(until=2.01)           # all arrivals routed; backlog in flight
+
+    calls = {"n": 0}
+    refreshes = {"n": 0}
+    orig_agg = S.Simulator._aggregate_state
+    orig_refresh = S.Simulator._refresh_view
+
+    def agg_spy(self, name, members, now=None):
+        calls["n"] += 1
+        return orig_agg(self, name, members, now)
+
+    def refresh_spy(self, w):
+        refreshes["n"] += 1
+        orig_refresh(self, w)
+    S.Simulator._aggregate_state = agg_spy
+    S.Simulator._refresh_view = refresh_spy
+    try:
+        sim.run()                 # pure drain: member events, no arrivals
+    finally:
+        S.Simulator._aggregate_state = orig_agg
+        S.Simulator._refresh_view = orig_refresh
+    assert refreshes["n"] > 50, "drain phase must churn member state"
+    assert calls["n"] == 0, \
+        f"{calls['n']} eager leaf aggregations during a read-free drain"
+    # a read after the drain still resolves to the live aggregate
+    leaf = sim.tree.children[0].name
+    row = sim.view.get(leaf)
+    members = [sim.workers[w] for w in sim._leaf_members[leaf]]
+    assert row.capacity == sum(w.slots_total() for w in members)
+    assert row.mem_free_mb == max(w.mem_free_mb() for w in members)
+    # ... and is cached: a second read with no member event in between
+    # does not re-aggregate
+    calls["n"] = 0
+    S.Simulator._aggregate_state = agg_spy
+    try:
+        first = sim.view.get(leaf)
+        again = sim.view.get(leaf)
+    finally:
+        S.Simulator._aggregate_state = orig_agg
+    assert first is again and calls["n"] == 0
 
 
 def test_inner_node_state_resolves_in_deep_trees():

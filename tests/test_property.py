@@ -232,6 +232,16 @@ def test_worker_memory_capacity_never_exceeded(seed):
     run_memory_cap_trial(seed)
 
 
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_event_backends_drain_in_identical_order(seed):
+    """Every registered EventEngine backend (single_heap, sharded, and
+    any future addition) pops arbitrary interleaved push/pop streams in
+    exactly the same (t, seq) order, with agreeing pending counts."""
+    from _prop_drivers import run_event_backend_ops
+    assert run_event_backend_ops(seed) > 0
+
+
 @given(st.integers(0, 10**6), st.integers(0, 10**6))
 @settings(max_examples=50, deadline=None)
 def test_data_stream_deterministic(step, seed):

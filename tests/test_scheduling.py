@@ -8,7 +8,6 @@ the pre-refactor flat-scan simulator and must keep matching the indexed
 one — across timeouts, hedging, unlimited concurrency, mixed tenants, a
 queue_len-sensitive service model, and a fully autoscaled run.
 """
-import hashlib
 
 import pytest
 
@@ -120,15 +119,7 @@ class QueueLenModel:
         return base, self.rng.random() >= 0.001
 
 
-def _digest(sim):
-    h = hashlib.sha256()
-    for r in sim.results:
-        h.update(repr((r.rid, r.fn, r.ok, r.arrival_t, r.start_t, r.finish_t,
-                       r.cold_start, r.worker, r.instance, r.error)).encode())
-    for t in sim.telemetry:
-        h.update(repr((t.fn, t.t, t.queue_len, t.inflight, t.batch_size,
-                       t.cold, t.latency, t.ok)).encode())
-    return h.hexdigest()[:16]
+from _prop_drivers import digest_sim as _digest  # noqa: E402  (shared def)
 
 
 def _scenario_sim(scenario, model, *, workers=8, sim_kw=None, cfg_over=None,
