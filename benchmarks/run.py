@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_kernels            Pallas kernel microbench (interpret) vs oracle
   bench_workload_scenarios named traffic shapes + >=1M-request bursty probe
   bench_autoscaler_scenarios autoscaler policy menu vs static replicate
+  bench_fault_scenarios    chaos layer: zone outage A/B + retry storm
   bench_sim_throughput     simulator events/s (testbed capacity)
   roofline_table           dry-run artifacts summary (if sweep has run)
 """
@@ -343,6 +344,86 @@ def bench_placement():
              f"fn_p95_vs_slo={','.join(parts)};sim_wall_s={wall:.1f}")
 
 
+def bench_fault_scenarios():
+    """Chaos-layer A/B (repro.core.faults): the seeded `zone_outage`
+    scenario across {spread, spread_zones} x {no retry, retry budget 2},
+    plus a `retry_storm` probe of the storm guard. The acceptance shape
+    (tests/test_faults.py): failure-domain-aware placement + a retry
+    budget rides through the outage; the zone-blind no-retry cell loses
+    its warm capacity and its in-flight work in one event."""
+    from repro.autoscale import build_pool
+    from repro.core.config_store import ConfigStore
+    from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                      summarize)
+    from repro.core.types import FunctionConfig
+    from repro.workloads import build_scenario
+
+    def _sim(wl, *, zones, branches, wpb, placer, retry_budget, prewarm,
+             **sim_kw):
+        # memory-capped one-replica workers: a pre-warmed steady state
+        # where *placement* decided which zones hold each function's
+        # warm capacity, and the surviving zone has no memory headroom
+        # to rebuild the dead zone's share. The zone-blind cell pays the
+        # outage in dead in-flight work plus a function stranded with no
+        # warm capacity anywhere; spread_zones keeps half of every
+        # function's replicas in the surviving zone and rides through.
+        store = ConfigStore()
+        for p in wl.profiles:
+            store.put(FunctionConfig(name=p.fn, arch="tiny_lm",
+                                     concurrency=4, cold_start_s=1.0,
+                                     timeout_s=8.0))
+        sim = Simulator(build_pool(branches, wpb,
+                                   leaf_policy="warm_least_loaded",
+                                   inner_policy="deadline_aware"),
+                        store, SyntheticServiceModel(seed=2, fail_rate=0.0),
+                        seed=7, zones=zones, placer=placer,
+                        worker_memory_mb=600, cold_start_default_s=1.0,
+                        retry_budget=retry_budget, **sim_kw)
+        for p in wl.profiles:
+            for _ in range(prewarm):
+                sim.place_prewarm(p.fn)
+        sim.load(wl)
+        return sim
+
+    for placer in ("spread", "spread_zones"):
+        for retry_budget in (0, 2):
+            wl = build_scenario("zone_outage", seed=3)
+            sim = _sim(wl, zones=2, branches=2, wpb=4, placer=placer,
+                       retry_budget=retry_budget, prewarm=4)
+            t0 = time.perf_counter()
+            results = sim.run()
+            s = summarize(results)
+            wall = time.perf_counter() - t0
+            parts = []
+            for fn, slo in sorted(wl.slo_targets().items()):
+                rows = [r for r in results if r.fn == fn]
+                att = (sum(1 for r in rows if r.ok and r.latency <= slo)
+                       / max(1, len(rows)))
+                parts.append(f"{fn}={att:.3f}")
+            fstats = sim.faults.summary()
+            _row(f"fault_zone_outage_{placer}_retry{retry_budget}",
+                 1e6 * s["p95"],
+                 f"n={s['n']};fail={s['fail_rate']:.4f};"
+                 f"slo_attainment={','.join(parts)};"
+                 f"retries={sim.retries_scheduled};"
+                 f"zone_outages={fstats['zone_outages']};"
+                 f"sim_wall_s={wall:.1f}")
+
+    # retry storm: 2 of 3 zones fail at once under heavy load; the storm
+    # guard caps concurrent retries and sheds the rest of the blast wave
+    # instead of re-offering all of it to the lone surviving zone
+    wl = build_scenario("retry_storm", seed=3, rps=1500.0)
+    sim = _sim(wl, zones=3, branches=3, wpb=2, placer="spread_zones",
+               retry_budget=3, retry_storm_cap=32, prewarm=3)
+    t0 = time.perf_counter()
+    s = summarize(sim.run())
+    wall = time.perf_counter() - t0
+    _row("fault_retry_storm", 1e6 * s["p95"],
+         f"n={s['n']};fail={s['fail_rate']:.4f};"
+         f"retries={sim.retries_scheduled};shed={sim.retries_shed};"
+         f"cap=32;sim_wall_s={wall:.1f}")
+
+
 def bench_event_backends():
     """ISSUE-5 acceptance probe: the standalone `EventEngine` under a
     ≥10M-request event stream, once per registered backend.
@@ -513,8 +594,8 @@ def roofline_table():
 BENCHES = [bench_tree_scaling, bench_lb_policies, bench_concurrency,
            bench_emulation, bench_serving_engine, bench_kernels,
            bench_workload_scenarios, bench_autoscaler_scenarios,
-           bench_placement, bench_event_backends, bench_sim_throughput,
-           roofline_table]
+           bench_placement, bench_fault_scenarios, bench_event_backends,
+           bench_sim_throughput, roofline_table]
 
 
 def main() -> None:

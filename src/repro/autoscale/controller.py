@@ -57,7 +57,7 @@ class ScalingDecision:
     replicas_before: int
     desired: int                # raw policy output, pre-clamp
     applied: int                # replicas after this tick
-    action: str                 # hold | up | down | cooldown | bound | floor
+    action: str     # hold | up | down | cooldown | bound | floor | outage_hold
     queue: int
     inflight: int
     workers: int
@@ -155,11 +155,16 @@ class Autoscaler:
     def _snapshot(self, sim) -> MetricsSample:
         workers = [sim.workers[w] for w in sim._worker_list
                    if w in sim.workers]
+        # partition-aware observation: a crashed/partitioned worker is
+        # not capacity — counting it dilutes load_per_worker exactly
+        # when pressure on the survivors is spiking
+        healthy = sum(1 for w in workers if w.healthy)
         cold = sim.cold_starts_total
         sample = MetricsSample(
             t=sim.now,
             replicas=len(sim.tree.children),
-            workers=len(workers),
+            workers=healthy,
+            unhealthy=len(workers) - healthy,
             queue=sum(len(w.queue) for w in workers),
             inflight=sum(w.inflight() for w in workers),
             arrivals=sim.arrivals_seen - self._last_arrivals,
@@ -191,7 +196,13 @@ class Autoscaler:
             for _ in range(target - current):
                 self._grow(sim)
         elif target < current:
-            if sim.now - self._last_scale_t < self.cooldown_s:
+            if sample.unhealthy > 0:
+                # partition-aware tick: with part of the fleet dark the
+                # window's completion/queue metrics are stale (stalled
+                # work on dead workers reads as vanished load) — never
+                # scale down on them; scale-up above stays allowed
+                action, target = "outage_hold", current
+            elif sim.now - self._last_scale_t < self.cooldown_s:
                 action, target = "cooldown", current
             elif not self._scaled:
                 action, target = "floor", current   # only shrink own branches

@@ -44,13 +44,14 @@ class MetricsSample:
 
     t: float
     replicas: int              # branches under the LB root
-    workers: int               # live (routable) workers
+    workers: int               # live *healthy* (routable) workers
     queue: int                 # queued requests across workers
     inflight: int              # busy instance slots across workers
     arrivals: int              # requests arrived since the previous tick
     completions: int           # results recorded since the previous tick
     cold_starts: int           # instances cold-started since the previous tick
     fns: Tuple[FnSample, ...] = ()     # per-function rows, sorted by name
+    unhealthy: int = 0         # workers currently failed/partitioned away
 
     @property
     def concurrency(self) -> int:
@@ -172,5 +173,9 @@ class LatencyEstimator:
         if not d:
             return 0.0
         xs = sorted(d)
-        # nearest-rank p95 (no interpolation: byte-stable across runs)
-        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+        # nearest-rank p95 (no interpolation: byte-stable across runs).
+        # ceil(0.95n) is the nearest-rank definition; the old
+        # int(0.95n) index over-shot by one rank — for n ≤ 20 it
+        # returned the window *max*, overstating small-sample tails.
+        import math
+        return xs[math.ceil(0.95 * len(xs)) - 1]

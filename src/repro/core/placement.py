@@ -22,6 +22,7 @@ The worker objects a placer sees are duck-typed (the simulator's
 - ``fits(mem_mb)``      admission check against the memory capacity
 - ``fn_replicas(fn)``   live replicas of one function on this worker
 - ``total_instances``   live replicas across all functions
+- ``zone``              failure domain (``Simulator(zones=...)``), or None
 
 Registering a custom placer mirrors the LB-policy and autoscaler
 registries::
@@ -135,3 +136,48 @@ class SpreadPlacer(Placer):
         return sorted((w for w in workers if w.fits(memory_mb)),
                       key=lambda w: (w.fn_replicas(fn), w.total_instances,
                                      -w.mem_free_mb()))
+
+
+@register_placer
+class SpreadZonesPlacer(Placer):
+    """Failure-domain-aware spread: balance a function's replicas across
+    *zones* first, then apply the per-worker spread key inside the zone.
+
+    ``spread`` is blind to the tree's failure domains — with few
+    functions and same-size workers it happily fills one branch, and a
+    zone outage then takes out a function's entire warm capacity at
+    once. This placer counts the function's replicas per zone over the
+    candidate set and always grows the least-loaded zone, so any single
+    zone holds at most ⌈replicas/zones⌉ of the function. Reaping is the
+    mirror: shrink the most replica-heavy zone first. With no zones
+    configured every worker shares the ``None`` domain and both orders
+    degenerate to plain ``spread``.
+    """
+
+    name = "spread_zones"
+
+    @staticmethod
+    def _zone_load(fn, workers):
+        load: dict = {}
+        for w in workers:
+            z = getattr(w, "zone", None)
+            load[z] = load.get(z, 0) + w.fn_replicas(fn)
+        return load
+
+    def place_order(self, fn, memory_mb, workers):
+        fits = [w for w in workers if w.fits(memory_mb)]
+        # zone load counts *every* candidate's replicas, not just the
+        # ones with room — a memory-full worker still anchors its zone's
+        # share of the function, and dropping it from the count would
+        # keep piling replicas into an already-loaded zone
+        load = self._zone_load(fn, workers)
+        return sorted(fits, key=lambda w: (
+            load[getattr(w, "zone", None)], w.fn_replicas(fn),
+            w.total_instances, -w.mem_free_mb()))
+
+    def reap_order(self, fn, workers):
+        load = self._zone_load(fn, workers)
+        # stable sort keeps the simulator's warmest-first preference
+        # order inside each zone
+        return sorted(workers,
+                      key=lambda w: -load[getattr(w, "zone", None)])

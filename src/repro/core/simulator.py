@@ -101,12 +101,18 @@ def _tree_uses_deadline(node) -> bool:
 _Instance = Instance
 _Worker = Worker
 
+# failure modes a retry budget may resurrect: infrastructure faults, not
+# per-request outcomes ("queue timeout" is the request's own deadline —
+# retrying it would double-spend an already-blown budget)
+RETRYABLE_ERRORS = frozenset({"worker died", "lost completion",
+                              "no healthy workers"})
+
 
 class Simulator:
     #: every event kind the run loop dispatches (bound once per run())
-    _EVENT_KINDS = ("arrival", "enqueue", "reroute", "maybe_hedge", "fail",
-                    "recover", "poke", "finish", "idle_check",
-                    "autoscale_tick")
+    _EVENT_KINDS = ("arrival", "enqueue", "reroute", "retry", "maybe_hedge",
+                    "fail", "recover", "fault", "poke", "finish",
+                    "idle_check", "autoscale_tick")
 
     def __init__(self, tree: LBNode, store: ConfigStore, service_model, *,
                  seed: int = 0, state_staleness_s: float = 0.0,
@@ -118,7 +124,13 @@ class Simulator:
                  placer="first_fit",
                  record_decisions: bool = False,
                  event_backend="single_heap",
-                 collect_telemetry: bool = True):
+                 collect_telemetry: bool = True,
+                 zones=None,
+                 retry_budget: int = 0,
+                 retry_backoff_s: float = 0.05,
+                 retry_backoff_cap_s: float = 1.0,
+                 retry_storm_cap: int = 512,
+                 faults=None):
         self.tree = tree
         self.store = store
         self.model = service_model
@@ -166,12 +178,20 @@ class Simulator:
         self._leaf_dirty_t: Dict[str, float] = {}
         self._leaf_ver: Dict[str, int] = {}
         self._leaf_cache: Dict[str, tuple] = {}
+        # failure domains: zones=N assigns each leaf branch a zone
+        # (z0..z{N-1}, round-robin in tree walk order, sticky across
+        # topology changes); zones={leaf: zone} maps them explicitly.
+        # Zones change no routing or service decision by themselves —
+        # only spread_zones placement and zone faults read them.
+        self.zones = zones
+        self._zone_assign: Dict[str, str] = {}
+        self.zone_workers: Dict[str, List[str]] = {}
         self._rebuild_leaf_index()
         if _tree_uses_deadline(tree):
             self._enable_service_est()
         self._draining: Dict[str, Worker] = {}  # removed, in-flight finishing
         self.engine = EventEngine(event_backend,
-                                  background=("autoscale_tick",))
+                                  background=("autoscale_tick", "fault"))
         self._push = self.engine.push      # hot path: skip a delegation hop
         self._iid = itertools.count()
         self.now = 0.0
@@ -183,6 +203,23 @@ class Simulator:
         self.telemetry: List[TelemetryRecord] = []
         self._finished: set = set()
         self._fn_cost: Dict[str, float] = {}
+        # per-request retry budget for RETRYABLE_ERRORS, with capped
+        # exponential backoff; retry_budget=0 (default) disables the
+        # whole path. The storm guard caps *concurrently pending*
+        # retries: a mass failure sheds the excess instead of
+        # re-offering the entire blast wave at once.
+        self.retry_budget = retry_budget
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_cap_s = retry_backoff_cap_s
+        self.retry_storm_cap = retry_storm_cap
+        self._retries_pending = 0
+        self.retries_scheduled = 0
+        self.retries_shed = 0
+        # chaos layer: None until a FaultConfig/FaultInjector is
+        # attached (directly or via a workload's .faults)
+        self.faults = None
+        if faults is not None:
+            self.attach_faults(faults)
 
     # --------------------------------------------------- control-plane API
     # Thin delegates: the logic lives on repro.autoscale.control.ControlPlane
@@ -238,6 +275,19 @@ class Simulator:
 
     def set_straggler(self, worker: str, factor: float):
         self.workers[worker].slowdown = factor
+
+    def attach_faults(self, faults) -> None:
+        """Attach the chaos layer: accepts a ``FaultConfig`` or a
+        prebuilt ``FaultInjector`` and arms it. A disabled config arms
+        nothing — the run stays byte-identical to a fault-free one."""
+        from repro.core.faults import FaultConfig, FaultInjector
+        if isinstance(faults, FaultConfig):
+            faults = FaultInjector(self, faults)
+        self.faults = faults
+        faults.arm()
+
+    def fault_log(self) -> str:
+        return "" if self.faults is None else self.faults.fault_log()
 
     # ------------------------------------------------------------ topology
     def add_branch(self, node: LBNode):
@@ -319,6 +369,29 @@ class Simulator:
             for c in node.children:
                 walk(c, path + [node.name])
         walk(self.tree, [])
+        if self.zones is not None:
+            # per-*branch* zones: every worker of a leaf shares its
+            # failure domain, so zone-blind spread (which happily packs
+            # one branch) and spread_zones genuinely diverge under a
+            # zone outage. Assignments are sticky: a leaf keeps its zone
+            # across unrelated add/remove_branch calls.
+            for leaf in self._leaf_members:
+                if leaf not in self._zone_assign:
+                    if isinstance(self.zones, dict):
+                        z = self.zones.get(leaf)
+                    else:
+                        z = f"z{len(self._zone_assign) % self.zones}"
+                    if z is not None:
+                        self._zone_assign[leaf] = z
+            self.zone_workers = {}
+            for leaf, members in self._leaf_members.items():
+                z = self._zone_assign.get(leaf)
+                for wname in members:
+                    w = self.workers.get(wname)
+                    if w is not None:
+                        w.zone = z
+                if z is not None:
+                    self.zone_workers.setdefault(z, []).extend(members)
         self._worker_ancestors = {w: sorted(a) for w, a in ancestors.items()}
         self._node_dirty = set(self._node_workers)
         self._node_cache = {}
@@ -486,7 +559,12 @@ class Simulator:
 
     def load(self, workload) -> int:
         """Submit every request of a ``repro.workloads`` workload;
-        returns the request count."""
+        returns the request count. A workload carrying a fault plan
+        (``workload.faults``, set by chaos scenarios) attaches it,
+        unless the simulator already has one."""
+        faults = getattr(workload, "faults", None)
+        if faults is not None and self.faults is None:
+            self.attach_faults(faults)
         return workload.submit_to(self)
 
     # ---------------------------------------------------------------- run
@@ -558,6 +636,18 @@ class Simulator:
         through the shrunk tree. Unlike an arrival this reuses the
         request's telemetry record and hedge timer — it is the same
         request, not new offered load."""
+        self._route_displaced(req, "reroute")
+
+    def _on_retry(self, req: Request):
+        """A retry backoff expired: re-offer the request through the
+        tree (it may have finished meanwhile via a hedge — then drop)."""
+        self._retries_pending -= 1
+        primary = req.hedged_from if req.hedged_from is not None else req.rid
+        if primary in self._finished:
+            return
+        self._route_displaced(req, "retry")
+
+    def _route_displaced(self, req: Request, kind: str):
         if self._healthy_count == 0:
             self._record_fail(req, "no healthy workers")
             return
@@ -567,7 +657,7 @@ class Simulator:
                        if self.workers[w].healthy]
             wid = self.rng.choice(healthy)
         if self._record:
-            self.control.log_routing("reroute", req, wid)
+            self.control.log_routing(kind, req, wid)
         req._worker = wid
         self._push(self.now + self.hop_s * hops, "enqueue", req)
 
@@ -577,7 +667,14 @@ class Simulator:
         clone = Request(fn=req.fn, arrival_t=self.now, payload=req.payload,
                         size=req.size, hedged_from=req.rid,
                         deadline_t=req.deadline_t)
+        # keep a handle on the primary so record_result can resolve its
+        # telemetry row when the clone wins the race
+        clone._primary = req
         self._on_arrival(clone)
+
+    def _on_fault(self, payload):
+        if self.faults is not None:
+            self.faults.on_event(payload)
 
     def _on_fail(self, worker: str):
         w = self.workers.get(worker)
@@ -653,12 +750,41 @@ class Simulator:
             rec = self.telemetry[req._telemetry_idx]
             rec.latency = res.latency
             rec.ok = ok
+            if req.hedged_from is not None:
+                # the clone won: the primary's row would otherwise stay
+                # at its placeholder latency=0.0, ok=True forever —
+                # resolve it with the primary's end-to-end outcome
+                prim = getattr(req, "_primary", None)
+                pidx = getattr(prim, "_telemetry_idx", None)
+                if pidx is not None:
+                    prec = self.telemetry[pidx]
+                    prec.latency = self.now - prim.arrival_t
+                    prec.ok = ok
         return True
 
     def _record_fail(self, req: Request, err: str):
         primary = req.hedged_from if req.hedged_from is not None else req.rid
         if primary in self._finished:
             return
+        # retry budget: resurrect infrastructure failures with capped
+        # exponential backoff. Hedge clones don't retry (the primary's
+        # own path still stands); the storm guard sheds retries beyond
+        # retry_storm_cap concurrently pending so a zone-sized blast
+        # wave can't multiply itself back into the queue instantly.
+        if (self.retry_budget > 0 and err in RETRYABLE_ERRORS
+                and req.hedged_from is None):
+            tried = getattr(req, "_retries", 0)
+            if tried < self.retry_budget:
+                if self._retries_pending >= self.retry_storm_cap:
+                    self.retries_shed += 1
+                else:
+                    req._retries = tried + 1
+                    self._retries_pending += 1
+                    self.retries_scheduled += 1
+                    backoff = min(self.retry_backoff_s * (2.0 ** tried),
+                                  self.retry_backoff_cap_s)
+                    self._push(self.now + backoff, "retry", req)
+                    return
         self._finished.add(primary)
         self.results.append(RequestResult(
             rid=primary, fn=req.fn, ok=False, arrival_t=req.arrival_t,

@@ -36,6 +36,8 @@ one implementation) must provide:
 ``_push(t, kind, payload)``  schedule an event on the event engine
 ``_record_fail(req, err)``   record a failed request
 ``_refresh_view(w)``         publish a worker's state row
+``faults``          the chaos layer (``repro.core.faults``) or None;
+                    consulted at service start for lost completions
 ``_dispatch(w)`` / ``_maybe_start_instance(w, cfg)`` /
 ``_start_service(w, inst, req, cfg, queue_len)`` / ``_poke(w, t)``
                     re-entry hooks — the runtime always re-enters
@@ -74,6 +76,7 @@ class Worker:
         self.memory_used_mb = 0.0              # incremental footprint
         self.slowdown = 1.0                    # straggler factor
         self.healthy = True
+        self.zone = None                       # failure domain (zones=...)
         self.replica_sets: Dict[str, FunctionReplicaSet] = {}
         self.iid_index: Dict[str, Instance] = {}   # iid -> live instance
         self.total_instances = 0
@@ -397,8 +400,14 @@ class WorkerRuntime:
             rec = sim.telemetry[req._telemetry_idx]
             rec.batch_size = inst.busy
             rec.cold = cold
-        sim._push(sim.now + dur, "finish",
-                  (req, w.name, inst.iid, cold, sim.now, ok))
+        faults = sim.faults
+        if faults is not None and faults.drop_finish(req, w):
+            # chaos layer: the completion is lost — no finish event; the
+            # slot stays busy until the fn timeout (see FaultInjector)
+            faults.lose_completion(w, inst, req, cfg)
+        else:
+            sim._push(sim.now + dur, "finish",
+                      (req, w.name, inst.iid, cold, sim.now, ok))
         w.busy_time += dur
 
     def finish(self, payload) -> None:
@@ -411,6 +420,16 @@ class WorkerRuntime:
         # entirely; the result below must still be recorded either way
         w = sim._draining.get(wname) if draining else sim.workers[wname]
         inst = w.iid_index.get(iid) if w is not None else None
+        if inst is None and not draining:
+            # the worker is live but the instance is gone: only a crash
+            # (`clear_instances` in `_on_fail`) removes instances that
+            # still hold busy slots — every reap path requires busy == 0,
+            # and a pending finish pins busy ≥ 1. This completion died
+            # with the worker; recording it as a success was the
+            # in-flight-ok bug (a drained-then-retired worker, w is None
+            # with draining=True, still completes below as before).
+            sim._record_fail(req, "worker died")
+            return
         if inst is not None:               # O(1) via the iid index
             w.note_busy(inst, -1)
             inst.last_used = sim.now
@@ -446,5 +465,7 @@ class WorkerRuntime:
                 # backlog (the seed left such work stranded until the
                 # next unrelated enqueue/finish — or forever)
                 sim._dispatch(w)
-                return
+        # always republish the view: dispatch refreshes it on success,
+        # but an unhealthy-worker dispatch returns without refreshing —
+        # the early return here used to leave routing blind to the reap
         sim._refresh_view(w)

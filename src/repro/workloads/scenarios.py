@@ -119,6 +119,58 @@ def multi_tenant_memory(**overrides) -> MixedWorkload:
     return multi_tenant(**overrides)
 
 
+@register_scenario("zone_outage")
+def zone_outage(*, rps: float = 150.0, duration_s: float = 12.0,
+                seed: int = 1, outage_at: float = 4.0,
+                outage_zone: str = "z0", outage_duration_s: float = 4.0,
+                slo_p95_s: float = 1.0, lost_finish_p: float = 0.0,
+                rid_base: Optional[int] = 0) -> MixedWorkload:
+    """Chaos scenario: steady two-tenant traffic with one failure domain
+    scripted to go dark mid-run. The workload carries its fault plan as
+    ``wl.faults`` (a ``FaultConfig``), which ``Simulator.load`` attaches
+    — run it against a ``Simulator(zones=...)`` so ``outage_zone``
+    exists. The canonical A/B: ``spread_zones`` placement + a retry
+    budget rides through the outage; zone-blind ``spread`` + no retries
+    loses its warm capacity and its in-flight work in one event."""
+    from repro.core.faults import FaultConfig
+    profiles = [
+        FunctionProfile("chat", weight=4.0, size=SizeDist.const(24),
+                        slo_p95_s=slo_p95_s),
+        FunctionProfile("embed", weight=1.0, size=SizeDist.const(32),
+                        slo_p95_s=2 * slo_p95_s),
+    ]
+    wl = MixedWorkload(PoissonArrivals(rps), profiles,
+                       duration_s=duration_s, seed=seed, rid_base=rid_base)
+    wl.faults = FaultConfig(
+        seed=seed, lost_finish_p=lost_finish_p,
+        scheduled=((outage_at, outage_zone, outage_duration_s),))
+    return wl
+
+
+@register_scenario("retry_storm")
+def retry_storm(*, rps: float = 400.0, duration_s: float = 10.0,
+                seed: int = 1, outage_at: float = 3.0,
+                outage_zones: tuple = ("z0", "z1"),
+                outage_duration_s: float = 2.0, slo_p95_s: float = 1.0,
+                rid_base: Optional[int] = 0) -> MixedWorkload:
+    """Chaos scenario: high-rate traffic with *most* of the fleet
+    (every zone named in ``outage_zones``) failing at once — the shape
+    where a retry budget without a storm guard re-offers the whole
+    blast wave back into the survivors. Exercises the simulator's
+    ``retry_storm_cap`` shedding."""
+    from repro.core.faults import FaultConfig
+    wl = MixedWorkload(
+        PoissonArrivals(rps),
+        [FunctionProfile("chat", size=SizeDist.const(24),
+                         slo_p95_s=slo_p95_s)],
+        duration_s=duration_s, seed=seed, rid_base=rid_base)
+    wl.faults = FaultConfig(
+        seed=seed,
+        scheduled=tuple((outage_at, z, outage_duration_s)
+                        for z in outage_zones))
+    return wl
+
+
 @register_scenario("trace_replay")
 def trace_replay(*, path: str, fn: str = "fn", fmt: str = "iat",
                  duration_s: Optional[float] = None, loop: bool = False,

@@ -1,0 +1,551 @@
+"""Chaos-layer regression suite (ISSUE 6).
+
+Four contracts:
+
+1. **Failure-path bugfixes** — in-flight requests on a crashed worker
+   fail with ``error="worker died"`` (never complete ok), ``idle_check``
+   always republishes the routing view, a winning hedge clone resolves
+   the primary's telemetry row, and ``LatencyEstimator.p95`` is exact
+   nearest-rank.
+2. **Faults-off byte identity** — a wired-but-disabled chaos layer
+   (``FaultConfig()`` attached, ``zones=`` set) reproduces the PR 3–5
+   golden result digests and decision logs byte-for-byte.
+3. **Seeded chaos determinism** — same seed ⇒ byte-identical fault
+   log, result stream, and decision log under injected faults.
+4. **The zone-outage A/B** — ``spread_zones`` placement + a retry
+   budget of 2 meets per-function SLO attainment that the zone-blind
+   ``spread`` + no-retry configuration misses on the same seeded
+   outage.
+"""
+import math
+
+import pytest
+
+from repro.autoscale import Autoscaler, build_pool
+from repro.autoscale.metrics import LatencyEstimator
+from repro.core.config_store import ConfigStore
+from repro.core.faults import FaultConfig, FaultInjector
+from repro.core.placement import get_placer
+from repro.core.router import build_leaf, build_tree
+from repro.core.simulator import (RETRYABLE_ERRORS, Simulator,
+                                  SyntheticServiceModel)
+from repro.core.types import FunctionConfig, Request
+from repro.workloads import build_scenario, install_demo_configs
+
+from _prop_drivers import digest_sim as _digest
+
+# --------------------------------------------------------------- fixtures
+
+
+def _store(**over):
+    s = ConfigStore()
+    s.put(FunctionConfig(**{**dict(name="fn", arch="tiny_lm", concurrency=1,
+                                   cold_start_s=0.05, idle_timeout_s=5.0,
+                                   timeout_s=8.0), **over}))
+    return s
+
+
+def _one_worker_sim(store=None, **sim_kw):
+    return Simulator(build_leaf("b", ["w0"], "least_loaded"),
+                     store or _store(), SyntheticServiceModel(seed=2),
+                     seed=5, **sim_kw)
+
+
+# ---------------------------------------- bugfix 1: in-flight crash path
+def test_inflight_request_on_crashed_worker_fails():
+    """A request in service when its worker dies must fail with
+    ``worker died`` — the seed recorded it as a successful completion."""
+    sim = _one_worker_sim()
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    sim.inject_failure("w0", at=0.02, recover_after=100.0)
+    res = sim.run()
+    assert len(res) == 1
+    assert res[0].ok is False
+    assert res[0].error == "worker died"
+
+
+def test_crash_fails_queued_and_inflight_work_distinctly():
+    """Queued work drains at crash time; in-flight work dies when its
+    (now orphaned) finish event fires. Both must fail."""
+    sim = _one_worker_sim()            # concurrency 1: rid 1 queues
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    sim.submit(Request(fn="fn", arrival_t=0.01, rid=1))
+    sim.inject_failure("w0", at=0.03, recover_after=100.0)
+    res = sim.run()
+    assert sorted(r.rid for r in res) == [0, 1]
+    assert all(not r.ok and r.error == "worker died" for r in res)
+
+
+def test_crash_spares_other_workers_inflight():
+    sim = Simulator(build_leaf("b", ["w0", "w1"], "least_loaded"),
+                    _store(), SyntheticServiceModel(seed=2), seed=5)
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))     # -> w0
+    sim.submit(Request(fn="fn", arrival_t=0.001, rid=1))   # -> w1
+    sim.inject_failure("w1", at=0.02, recover_after=100.0)
+    res = {r.rid: r for r in sim.run()}
+    died = [r for r in res.values() if not r.ok]
+    lived = [r for r in res.values() if r.ok]
+    assert len(died) == 1 and died[0].error == "worker died"
+    assert len(lived) == 1 and lived[0].latency > 0.0
+
+
+# ------------------------------------------- bugfix 2: idle_check view
+def test_idle_check_republishes_routing_view():
+    """Reaping an idle replica must refresh the routing view even when
+    the worker also has queued work (the dispatch path used to swallow
+    the refresh on unhealthy workers)."""
+    sim = _one_worker_sim(_store(idle_timeout_s=0.1))
+    sim.prewarm("w0", "fn")
+    seen = []
+    orig = sim._refresh_view
+
+    def spy(w):
+        seen.append((sim.now, w.name, w.total_instances))
+        return orig(w)
+    sim._refresh_view = spy
+    sim.run()
+    # the reap at t=0.1 republished: last view refresh shows 0 instances
+    assert seen and seen[-1][2] == 0
+    assert sim.view.get("w0", sim.now).warm_fns == frozenset()
+
+
+# -------------------------------------- bugfix 3: hedge-win telemetry
+def test_hedge_clone_win_resolves_primary_telemetry():
+    """When a hedge clone wins the race the primary's telemetry row must
+    carry the end-to-end latency/outcome — the seed left it at the
+    placeholder ``latency=0.0, ok=True``."""
+    store = _store(concurrency=1, cold_start_s=0.0)
+    sim = Simulator(build_leaf("b", ["w0", "w1"], "least_loaded"), store,
+                    SyntheticServiceModel(seed=2), seed=5,
+                    hedge_after_s=0.02)
+    sim.set_straggler("w0", 50.0)      # primary's worker is pathological
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    res = sim.run()
+    assert len(res) == 1 and res[0].ok
+    # the clone must actually have won (finished on the fast worker)
+    assert res[0].worker == "w1"
+    prim_rows = [t for t in sim.telemetry if t.fn == "fn"]
+    assert len(prim_rows) == 2         # primary + clone
+    # primary row (arrival order: index 0) resolved to the *end-to-end*
+    # latency from the primary's arrival at t=0 (the result row keeps
+    # the winning clone's shorter arrival->finish span)
+    assert prim_rows[0].latency == pytest.approx(res[0].finish_t)
+    assert prim_rows[0].ok is True
+    assert prim_rows[0].latency >= res[0].latency > 0.0
+
+
+# -------------------------------------------- bugfix 4: p95 nearest-rank
+def test_latency_estimator_p95_nearest_rank():
+    est = LatencyEstimator(maxlen=200)
+    for v in range(1, 101):
+        est.observe("fn", float(v))
+    # nearest-rank: ceil(0.95 * 100) = 95th order statistic
+    assert est.p95("fn") == 95.0
+    est2 = LatencyEstimator()
+    est2.observe("g", 7.0)
+    assert est2.p95("g") == 7.0        # n=1: the only sample, not IndexError
+    est3 = LatencyEstimator()
+    for v in range(1, 21):
+        est3.observe("h", float(v))
+    assert est3.p95("h") == float(math.ceil(0.95 * 20))   # 19.0
+
+
+# ------------------------------------------------- faults-off byte identity
+# golden digests from tests/test_scheduling.py: the chaos layer wired in
+# but disabled (default FaultConfig + zones assigned) must not move a byte
+GOLDEN_OFF = {
+    "steady": ("90ac57f36c579d36",
+               dict(scenario="steady", rps=300.0, duration_s=8.0, seed=3)),
+    "multi_tenant": ("ec5034f85267151c",
+                     dict(scenario="multi_tenant", rps=400.0,
+                          duration_s=8.0, seed=3)),
+}
+
+
+@pytest.mark.parametrize("case", sorted(GOLDEN_OFF))
+def test_faults_off_byte_identity(case):
+    digest, kw = GOLDEN_OFF[case]
+    kw = dict(kw)
+    wl = build_scenario(kw.pop("scenario"), **kw)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_tree(8, fanout=4), store,
+                    SyntheticServiceModel(seed=2), seed=7,
+                    zones=2, faults=FaultConfig())
+    assert sim.faults is not None and not sim.faults.cfg.enabled
+    sim.load(wl)
+    sim.run()
+    assert _digest(sim) == digest
+    assert sim.fault_log() == ""
+
+
+def test_faults_off_decision_log_identical():
+    """Wired-but-disabled chaos + zones: the autoscaler decision log is
+    byte-identical to a fault-free run (partition-aware metrics see zero
+    unhealthy workers and change nothing)."""
+    def run(**extra):
+        wl = build_scenario("flash_crowd", duration_s=12.0, seed=3,
+                            base_rps=12.0, burst_rps=800.0,
+                            mean_burst_s=2.0, mean_calm_s=6.0)
+        store = ConfigStore()
+        install_demo_configs(store, wl)
+        sim = Simulator(build_pool(1, 2), store,
+                        SyntheticServiceModel(seed=2), seed=7,
+                        worker_capacity_slots=1, **extra)
+        scaler = Autoscaler("reactive", interval_s=0.25, window_s=2.0,
+                            min_replicas=1, max_replicas=8,
+                            workers_per_replica=2, cooldown_s=2.0)
+        sim.attach_autoscaler(scaler)
+        sim.load(wl)
+        sim.run()
+        return _digest(sim), scaler.decision_log()
+    base = run()
+    wired = run(zones=2, faults=FaultConfig())
+    assert wired == base
+
+
+# ------------------------------------------------------ zones plumbing
+def test_zone_assignment_per_leaf_branch():
+    sim = Simulator(build_pool(3, 2), _store(), SyntheticServiceModel(seed=2),
+                    seed=5, zones=2)
+    zs = {n: w.zone for n, w in sim.workers.items()}
+    # leaf branches are failure domains, round-robin across zones
+    assert zs["pool-b0-w0"] == zs["pool-b0-w1"] == "z0"
+    assert zs["pool-b1-w0"] == zs["pool-b1-w1"] == "z1"
+    assert zs["pool-b2-w0"] == "z0"
+    assert set(sim.zone_workers) == {"z0", "z1"}
+    assert sorted(sim.zone_workers["z1"]) == ["pool-b1-w0", "pool-b1-w1"]
+
+
+def test_zone_assignment_explicit_mapping():
+    sim = Simulator(build_pool(2, 1), _store(), SyntheticServiceModel(seed=2),
+                    seed=5, zones={"pool-b0": "east", "pool-b1": "west"})
+    assert sim.workers["pool-b0-w0"].zone == "east"
+    assert sim.workers["pool-b1-w0"].zone == "west"
+
+
+# --------------------------------------------------- spread_zones placer
+class _FakeWorker:
+    def __init__(self, name, zone, reps=0, free=1000.0):
+        self.name, self.zone = name, zone
+        self._reps, self._free = reps, free
+        self.total_instances = reps
+
+    def fits(self, mem):
+        return self._free >= mem
+
+    def mem_free_mb(self):
+        return self._free
+
+    def fn_replicas(self, fn):
+        return self._reps
+
+
+def test_spread_zones_balances_across_zones():
+    p = get_placer("spread_zones")
+    ws = [_FakeWorker("a0", "z0", reps=1), _FakeWorker("a1", "z0"),
+          _FakeWorker("b0", "z1"), _FakeWorker("b1", "z1")]
+    order = p.place_order("fn", 100.0, ws)
+    assert order[0].zone == "z1"       # grow the empty zone first
+    reap = p.reap_order("fn", ws)
+    assert reap[0].zone == "z0"        # shrink the loaded zone first
+
+
+def test_spread_zones_counts_memory_full_workers():
+    """Regression: a memory-full worker's replicas still anchor its
+    zone's load — dropping it from the count piled every replica into
+    one zone (and made spread_zones behave exactly like spread)."""
+    p = get_placer("spread_zones")
+    ws = [_FakeWorker("a0", "z0", reps=1, free=0.0),   # full, holds the fn
+          _FakeWorker("a1", "z0"),
+          _FakeWorker("b0", "z1")]
+    order = p.place_order("fn", 100.0, ws)
+    assert [w.name for w in order] == ["b0", "a1"]
+
+
+def test_spread_zones_degenerates_without_zones():
+    spread, zoned = get_placer("spread"), get_placer("spread_zones")
+    ws = [_FakeWorker(f"w{i}", None, reps=i % 2) for i in range(4)]
+    assert ([w.name for w in zoned.place_order("fn", 1.0, ws)]
+            == [w.name for w in spread.place_order("fn", 1.0, ws)])
+
+
+# ------------------------------------------------------ fault processes
+def test_scheduled_zone_outage_fails_and_recovers():
+    store = _store(concurrency=4, timeout_s=1.0)
+    sim = Simulator(build_pool(2, 1), store, SyntheticServiceModel(seed=2),
+                    seed=5, zones=2,
+                    faults=FaultConfig(scheduled=((0.5, "z0", 1.0),)))
+    wl = build_scenario("steady", rps=100.0, duration_s=3.0, seed=1)
+    sim.load(wl)
+    res = sim.run()
+    st = sim.faults.stats
+    assert st.zone_outages == 1 and st.zone_recoveries == 1
+    assert sim.workers["pool-b0-w0"].healthy       # recovered by end
+    # recover-then-dispatch: traffic lands on the healed zone again
+    post = [r for r in res if r.ok and r.worker == "pool-b0-w0"
+            and r.finish_t > 1.5]
+    assert post
+    lines = sim.fault_log().splitlines()
+    assert lines[0].startswith("t=0.500000 zone_down zone=z0 workers=1")
+    assert any(line.endswith("zone_up zone=z0") for line in lines)
+
+
+def test_worker_crash_restart_chain():
+    sim = _one_worker_sim(_store(concurrency=8),
+                          faults=FaultConfig(seed=3, worker_mttf_s=0.5,
+                                             worker_mttr_s=0.2))
+    wl = build_scenario("steady", rps=150.0, duration_s=4.0, seed=1)
+    sim.load(wl)
+    res = sim.run()                     # must terminate (faults re-arm
+    st = sim.faults.stats               # only while real work remains)
+    assert st.crashes >= 2
+    assert st.restores >= 1
+    assert any(not r.ok and r.error == "worker died" for r in res)
+
+
+def test_straggler_episode_layers_and_restores():
+    store = _store(concurrency=8)
+    sim = Simulator(build_leaf("b", ["w0", "w1"], "least_loaded"), store,
+                    SyntheticServiceModel(seed=2), seed=5,
+                    faults=FaultConfig(seed=1, straggler_rate=2.0,
+                                       straggler_factor=4.0,
+                                       straggler_duration_s=0.2,
+                                       horizon_s=2.0))
+    sim.workers["w0"].slowdown = 2.0    # configured base straggler
+    wl = build_scenario("steady", rps=100.0, duration_s=4.0, seed=1)
+    sim.load(wl)
+    sim.run()
+    assert sim.faults.stats.stragglers >= 1
+    # the horizon stops new episodes at t=2 while traffic runs to t=4,
+    # so every episode ended mid-run: slowdowns restored to base values
+    # (a transient on w0 layered multiplicatively on its base 2.0)
+    assert sim.workers["w0"].slowdown == 2.0
+    assert sim.workers["w1"].slowdown == 1.0
+    log = sim.fault_log()
+    assert "straggle" in log and "unstraggle" in log
+
+
+def test_lost_completion_times_out_then_frees_slot():
+    """A dropped finish leaves a zombie slot until ``timeout_s``; the
+    request fails as ``lost completion`` and the freed slot then serves
+    the backlog."""
+    store = _store(concurrency=1, timeout_s=0.5, cold_start_s=0.0)
+    sim = _one_worker_sim(store, faults=FaultConfig(seed=1, lost_finish_p=1.0,
+                                                    horizon_s=0.05))
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    res = sim.run()
+    assert len(res) == 1
+    assert not res[0].ok and res[0].error == "lost completion"
+    assert res[0].finish_t == pytest.approx(0.5, abs=0.05)
+    assert sim.faults.stats.lost_completions == 1
+    assert sim.workers["w0"].inflight() == 0       # zombie slot freed
+
+
+# ------------------------------------------------------- retry budget
+def test_retry_rescues_worker_died():
+    store = _store(concurrency=1, cold_start_s=0.0)
+    sim = Simulator(build_leaf("b", ["w0", "w1"], "least_loaded"), store,
+                    SyntheticServiceModel(seed=2), seed=5, retry_budget=2)
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    sim.inject_failure("w0", at=0.01, recover_after=100.0)
+    res = sim.run()
+    assert len(res) == 1
+    assert res[0].ok                   # resurrected on the survivor
+    assert res[0].worker == "w1"
+    assert sim.retries_scheduled == 1
+
+
+def test_retry_budget_exhausts():
+    sim = _one_worker_sim(retry_budget=2, retry_backoff_s=0.01,
+                          retry_backoff_cap_s=0.02)
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    sim.inject_failure("w0", at=0.01, recover_after=100.0)
+    res = sim.run()
+    assert len(res) == 1 and not res[0].ok
+    # first failure is "worker died"; both retries then find no healthy
+    # workers and the budget runs out
+    assert res[0].error in RETRYABLE_ERRORS
+    assert sim.retries_scheduled == 2
+
+
+def test_queue_timeout_is_not_retryable():
+    assert "queue timeout" not in RETRYABLE_ERRORS
+    store = _store(concurrency=1, timeout_s=0.02, cold_start_s=0.5)
+    sim = _one_worker_sim(store, retry_budget=3)
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    sim.submit(Request(fn="fn", arrival_t=0.001, rid=1))
+    res = sim.run()
+    timed_out = [r for r in res if not r.ok and r.error == "queue timeout"]
+    assert timed_out                   # the per-request deadline fired
+    assert sim.retries_scheduled == 0  # and was never double-spent
+
+
+def test_retry_storm_guard_sheds_excess():
+    """2 of 3 zones die under heavy load: concurrently pending retries
+    stay capped and the excess is shed, not re-offered."""
+    wl = build_scenario("retry_storm", seed=3, rps=1500.0)
+    store = ConfigStore()
+    for p in wl.profiles:
+        store.put(FunctionConfig(name=p.fn, arch="tiny_lm", concurrency=4,
+                                 cold_start_s=1.0, timeout_s=8.0))
+    sim = Simulator(build_pool(3, 2, leaf_policy="warm_least_loaded",
+                               inner_policy="deadline_aware"),
+                    store, SyntheticServiceModel(seed=2, fail_rate=0.0),
+                    seed=7, zones=3, placer="spread_zones",
+                    worker_memory_mb=600, cold_start_default_s=1.0,
+                    retry_budget=3, retry_storm_cap=32)
+    for p in wl.profiles:
+        for _ in range(3):
+            sim.place_prewarm(p.fn)
+    sim.load(wl)
+    sim.run()
+    assert sim.faults.stats.zone_outages == 2
+    assert sim.retries_shed > 0
+    assert sim.retries_scheduled <= 32 * 3   # cap x budget bounds total
+
+
+def test_hedge_clones_do_not_retry():
+    store = _store(concurrency=1, cold_start_s=0.0)
+    sim = Simulator(build_leaf("b", ["w0", "w1"], "least_loaded"), store,
+                    SyntheticServiceModel(seed=2), seed=5, retry_budget=3,
+                    hedge_after_s=0.01)
+    sim.set_straggler("w0", 50.0)
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    sim.inject_failure("w1", at=0.02, recover_after=100.0)  # kill the clone
+    res = sim.run()
+    assert len(res) == 1
+    # the primary's own (slow) path still completes; the dead clone must
+    # not have consumed retry budget
+    assert sim.retries_scheduled == 0
+
+
+# -------------------------------------------- partition-aware autoscaler
+class _ShrinkPolicy:
+    name = "shrink"
+    interval_s = 0.5
+
+    def desired_replicas(self, window, current):
+        return 1
+
+    def fn_actions(self, window):
+        return {}
+
+
+def test_autoscaler_holds_scale_down_during_outage():
+    sim = Simulator(build_pool(3, 1), _store(), SyntheticServiceModel(seed=2),
+                    seed=5)
+    scaler = Autoscaler(_ShrinkPolicy(), min_replicas=1, max_replicas=8,
+                        cooldown_s=0.0)
+    sim.control.autoscaler = scaler
+    sim._on_fail("pool-b1-w0")
+    d = scaler.on_tick(sim)
+    assert d.action == "outage_hold"
+    assert d.applied == 3              # fleet untouched
+    assert d.workers == 2              # healthy only
+    sim._on_recover("pool-b1-w0")
+    d2 = scaler.on_tick(sim)
+    # hold releases once the fleet heals (floor: this loop never added
+    # the branches it would shrink)
+    assert d2.action == "floor"
+    assert d2.workers == 3
+
+
+# ------------------------------------------------- seeded determinism
+def _outage_ab_sim(placer, retry_budget):
+    """The locked acceptance shape: memory-capped one-replica workers,
+    deadline-aware root, two zones, pre-warmed steady state, scripted
+    z0 outage (mirrors benchmarks/run.py bench_fault_scenarios)."""
+    wl = build_scenario("zone_outage", seed=3)
+    store = ConfigStore()
+    for p in wl.profiles:
+        store.put(FunctionConfig(name=p.fn, arch="tiny_lm", concurrency=4,
+                                 cold_start_s=1.0, timeout_s=8.0))
+    sim = Simulator(build_pool(2, 4, leaf_policy="warm_least_loaded",
+                               inner_policy="deadline_aware"),
+                    store, SyntheticServiceModel(seed=2, fail_rate=0.0),
+                    seed=7, zones=2, placer=placer, worker_memory_mb=600,
+                    cold_start_default_s=1.0, retry_budget=retry_budget)
+    for p in wl.profiles:
+        for _ in range(4):
+            sim.place_prewarm(p.fn)
+    sim.load(wl)
+    sim.run()
+    return sim, wl
+
+
+def _attainment(sim, wl):
+    out = {}
+    for fn, slo in sorted(wl.slo_targets().items()):
+        rows = [r for r in sim.results if r.fn == fn]
+        out[fn] = sum(1 for r in rows
+                      if r.ok and r.latency <= slo) / len(rows)
+    return out
+
+
+def test_same_seed_byte_identical_fault_and_decision_logs():
+    a, _ = _outage_ab_sim("spread_zones", 2)
+    b, _ = _outage_ab_sim("spread_zones", 2)
+    assert a.fault_log() == b.fault_log()
+    assert a.fault_log()                       # non-empty: faults fired
+    assert _digest(a) == _digest(b)
+    assert a.retries_scheduled == b.retries_scheduled
+
+
+# --------------------------------------------- acceptance: the chaos A/B
+def test_zone_outage_ab_spread_zones_with_retries_meets_slo():
+    """The PR's headline experiment: on the same seeded z0 outage,
+    failure-domain-aware placement + a retry budget of 2 keeps every
+    function's SLO attainment >= 95%, while zone-blind ``spread`` with
+    no retries strands one function's entire warm capacity in the dead
+    zone and misses by a wide margin."""
+    good, wl = _outage_ab_sim("spread_zones", 2)
+    blind, _ = _outage_ab_sim("spread", 0)
+    att_good, att_blind = _attainment(good, wl), _attainment(blind, wl)
+
+    assert all(v >= 0.95 for v in att_good.values()), att_good
+    assert min(att_blind.values()) < 0.80, att_blind
+    # the retry budget actually fired and reduced hard failures
+    assert good.retries_scheduled > 0
+    n_fail = lambda s: sum(1 for r in s.results if not r.ok)  # noqa: E731
+    assert n_fail(good) < n_fail(blind)
+
+
+def test_zone_outage_retry_budget_cuts_failures():
+    with_retry, _ = _outage_ab_sim("spread_zones", 2)
+    no_retry, _ = _outage_ab_sim("spread_zones", 0)
+    fails = lambda s: sum(1 for r in s.results if not r.ok)  # noqa: E731
+    assert fails(with_retry) < fails(no_retry)
+    assert with_retry.retries_scheduled > 0
+
+
+# --------------------------------------------------- workload plumbing
+def test_scenarios_carry_fault_plans():
+    wl = build_scenario("zone_outage", seed=9, outage_at=1.0,
+                        outage_zone="z1", outage_duration_s=2.0)
+    assert isinstance(wl.faults, FaultConfig)
+    assert wl.faults.scheduled == ((1.0, "z1", 2.0),)
+    storm = build_scenario("retry_storm", seed=9)
+    assert len(storm.faults.scheduled) == 2
+
+
+def test_load_attaches_workload_fault_plan_once():
+    sim = Simulator(build_pool(2, 1), _store(), SyntheticServiceModel(seed=2),
+                    seed=5, zones=2)
+    wl = build_scenario("zone_outage", seed=1)
+    sim.load(wl)
+    assert isinstance(sim.faults, FaultInjector)
+    assert sim.faults.cfg is wl.faults
+    # an explicitly attached injector is not overwritten by load()
+    sim2 = Simulator(build_pool(2, 1), _store(), SyntheticServiceModel(seed=2),
+                     seed=5, zones=2, faults=FaultConfig(seed=42))
+    inj = sim2.faults
+    sim2.load(build_scenario("zone_outage", seed=1))
+    assert sim2.faults is inj
+
+
+def test_default_fault_config_is_disabled():
+    assert not FaultConfig().enabled
+    assert FaultConfig(scheduled=((1.0, "z0", 1.0),)).enabled
+    assert FaultConfig(worker_mttf_s=10.0).enabled
+    assert FaultConfig(lost_finish_p=0.1).enabled
