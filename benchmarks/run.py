@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_workload_scenarios named traffic shapes + >=1M-request bursty probe
   bench_autoscaler_scenarios autoscaler policy menu vs static replicate
   bench_fault_scenarios    chaos layer: zone outage A/B + retry storm
+  bench_workflows          DAG workflows: stage-blind vs DAG-aware routing
   bench_sim_throughput     simulator events/s (testbed capacity)
   roofline_table           dry-run artifacts summary (if sweep has run)
 """
@@ -424,6 +425,41 @@ def bench_fault_scenarios():
          f"cap=32;sim_wall_s={wall:.1f}")
 
 
+def bench_workflows():
+    """ISSUE-7 acceptance probe: DAG workflows (`ml_pipeline` chain +
+    conditional branch, `etl_fanout` map-reduce) routed stage-blind
+    (`deadline_aware`) vs DAG-aware (`workflow_aware`) on identical
+    fixed trees — equal worker-seconds, so the end-to-end workflow p95
+    delta is routing-only. The acceptance shape (tests/test_workflows.py):
+    eager critical-path cold starts + affinity tie-break + sibling
+    waterfill beat the stage-blind baseline on both scenarios."""
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import build_tree
+    from repro.core.simulator import Simulator, SyntheticServiceModel
+    from repro.workloads import (build_scenario, install_demo_configs,
+                                 summarize_workflows)
+
+    for scen in ("ml_pipeline", "etl_fanout"):
+        for policy in ("deadline_aware", "workflow_aware"):
+            wl = build_scenario(scen, duration_s=40.0, seed=13)
+            store = ConfigStore()
+            install_demo_configs(store, wl)
+            sim = Simulator(build_tree(8, fanout=4, leaf_policy=policy,
+                                       inner_policy=policy),
+                            store, SyntheticServiceModel(seed=2), seed=11)
+            sim.load(wl)
+            t0 = time.perf_counter()
+            sim.run()
+            wall = time.perf_counter() - t0
+            s = summarize_workflows(sim.workflow_results)
+            eng = sim.workflows
+            _row(f"workflow_{scen}_{policy}", 1e6 * s["p95"],
+                 f"n={s['n']};tasks={eng.tasks_submitted};"
+                 f"fail={s['fail_rate']:.4f};p50_ms={s['p50']*1e3:.1f};"
+                 f"p99_ms={s['p99']*1e3:.1f};prewarms={eng.prewarms};"
+                 f"sim_wall_s={wall:.1f}")
+
+
 def bench_event_backends():
     """ISSUE-5 acceptance probe: the standalone `EventEngine` under a
     ≥10M-request event stream, once per registered backend.
@@ -594,8 +630,8 @@ def roofline_table():
 BENCHES = [bench_tree_scaling, bench_lb_policies, bench_concurrency,
            bench_emulation, bench_serving_engine, bench_kernels,
            bench_workload_scenarios, bench_autoscaler_scenarios,
-           bench_placement, bench_fault_scenarios, bench_event_backends,
-           bench_sim_throughput, roofline_table]
+           bench_placement, bench_fault_scenarios, bench_workflows,
+           bench_event_backends, bench_sim_throughput, roofline_table]
 
 
 def main() -> None:

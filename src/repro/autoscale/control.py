@@ -150,6 +150,22 @@ class ControlPlane:
                 return w.name
         return None
 
+    def workflow_prewarm(self, fn: str) -> Optional[str]:
+        """Stage-lookahead prewarm: the workflow engine calls this when a
+        stage is submitted so its *successors'* functions are warm by the
+        time the stage completes. Only acts when the fleet holds no
+        replica of the function at all — steady traffic keeps its own
+        capacity warm; this hook exists to hide the first cold start on
+        each DAG edge (and after idle reaping between workflow bursts).
+        Returns the worker the placer picked, or None (already warm
+        somewhere / no headroom)."""
+        sim = self.sim
+        for name in sim._worker_list:
+            w = sim.workers.get(name)
+            if w is not None and w.healthy and w.fn_replicas(fn) > 0:
+                return None
+        return self.place_prewarm(fn)
+
     # ------------------------------------------------------ autoscaler loop
     def attach_autoscaler(self, scaler, *, first_tick_s: float = None):
         """Bind an ``repro.autoscale.Autoscaler`` and schedule its periodic

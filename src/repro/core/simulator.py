@@ -69,11 +69,12 @@ class SyntheticServiceModel:
 
 # LB policies that read the per-function WorkerState layer; the simulator
 # only pays for building those snapshots when the tree routes with one
-_FN_STATE_POLICIES = frozenset({"warm_least_loaded", "deadline_aware"})
+_FN_STATE_POLICIES = frozenset({"warm_least_loaded", "deadline_aware",
+                                "workflow_aware"})
 
 # LB policies that additionally price backlogs with the windowed service
 # estimator; the simulator only feeds it when the tree routes with one
-_DEADLINE_POLICIES = frozenset({"deadline_aware"})
+_DEADLINE_POLICIES = frozenset({"deadline_aware", "workflow_aware"})
 
 
 def _tree_uses_fn_state(node) -> bool:
@@ -112,7 +113,7 @@ class Simulator:
     #: every event kind the run loop dispatches (bound once per run())
     _EVENT_KINDS = ("arrival", "enqueue", "reroute", "retry", "maybe_hedge",
                     "fail", "recover", "fault", "poke", "finish",
-                    "idle_check", "autoscale_tick")
+                    "idle_check", "autoscale_tick", "workflow_done")
 
     def __init__(self, tree: LBNode, store: ConfigStore, service_model, *,
                  seed: int = 0, state_staleness_s: float = 0.0,
@@ -198,6 +199,7 @@ class Simulator:
         self.events_processed = 0
         self.arrivals_seen = 0
         self.arrivals_by_fn: Dict[str, int] = {}   # per-fn scaling signal
+        self.hedges_seen = 0         # hedge clones, counted apart from demand
         self.cold_starts_total = 0   # survives worker removal (scale-down)
         self.results: List[RequestResult] = []
         self.telemetry: List[TelemetryRecord] = []
@@ -215,6 +217,10 @@ class Simulator:
         self._retries_pending = 0
         self.retries_scheduled = 0
         self.retries_shed = 0
+        # workflow layer: None until a WorkflowWorkload (or a direct
+        # attach_workflows call) binds a WorkflowEngine
+        self.workflows = None
+        self.workflow_results: List = []   # WorkflowResult per instance
         # chaos layer: None until a FaultConfig/FaultInjector is
         # attached (directly or via a workload's .faults)
         self.faults = None
@@ -288,6 +294,13 @@ class Simulator:
 
     def fault_log(self) -> str:
         return "" if self.faults is None else self.faults.fault_log()
+
+    def attach_workflows(self, engine):
+        """Bind the workflow DAG runtime (``repro.workloads.workflows``).
+        ``WorkflowWorkload.submit_to`` attaches one automatically; several
+        workflow workloads submitted into one simulator share it."""
+        self.workflows = engine
+        return engine
 
     # ------------------------------------------------------------ topology
     def add_branch(self, node: LBNode):
@@ -597,8 +610,15 @@ class Simulator:
         self.control.on_tick()
 
     def _on_arrival(self, req: Request):
-        self.arrivals_seen += 1
-        self.arrivals_by_fn[req.fn] = self.arrivals_by_fn.get(req.fn, 0) + 1
+        if req.hedged_from is None:
+            self.arrivals_seen += 1
+            self.arrivals_by_fn[req.fn] = self.arrivals_by_fn.get(req.fn,
+                                                                  0) + 1
+        else:
+            # hedge clones are the platform's own speculation, not
+            # offered load: counting them as arrivals fed the autoscaler
+            # synthetic demand that grew with its own hedging
+            self.hedges_seen += 1
         # healthy set is tracked incrementally; the full list is only
         # materialised on the rare stale-routing re-roll (the seed built
         # it on every arrival: O(fleet) on the hottest event)
@@ -664,9 +684,18 @@ class Simulator:
     def _on_maybe_hedge(self, req: Request):
         if req.rid in self._finished:
             return
+        # the clone's rid derives from the primary (-rid - 1), not the
+        # process-global counter: workload rids are >= 0 so clone ids
+        # cannot collide, and two same-seed runs in one process now
+        # produce byte-identical routing logs (the global counter kept
+        # advancing across runs). Clones never hedge again, so the
+        # mapping needn't nest.
         clone = Request(fn=req.fn, arrival_t=self.now, payload=req.payload,
-                        size=req.size, hedged_from=req.rid,
-                        deadline_t=req.deadline_t)
+                        size=req.size, rid=-req.rid - 1,
+                        hedged_from=req.rid, deadline_t=req.deadline_t,
+                        wf=req.wf, stage=req.stage, wf_task=req.wf_task,
+                        wf_critical=req.wf_critical,
+                        wf_affinity=req.wf_affinity)
         # keep a handle on the primary so record_result can resolve its
         # telemetry row when the clone wins the race
         clone._primary = req
@@ -675,6 +704,10 @@ class Simulator:
     def _on_fault(self, payload):
         if self.faults is not None:
             self.faults.on_event(payload)
+
+    def _on_workflow_done(self, payload):
+        if self.workflows is not None:
+            self.workflows.fire(self, payload)
 
     def _on_fail(self, worker: str):
         w = self.workers.get(worker)
@@ -728,6 +761,25 @@ class Simulator:
         self.runtime.poke(w, t)
 
     # ------------------------------------------------------ result recording
+    def _resolve_telemetry(self, req: Request, ok: bool) -> None:
+        """Resolve a request's placeholder telemetry row (created at
+        arrival with ``latency=0.0, ok=True``) to its final outcome.
+        Guarded: a request that failed *before* routing ("no healthy
+        workers" at arrival) never got a row — dereferencing the missing
+        index used to crash the retry-after-recovery path. Resolution is
+        exactly-once: clearing the index keeps a hedge loser's late
+        completion from clobbering the end-to-end outcome the winner
+        already stamped on the primary's row."""
+        if not self.collect_telemetry:
+            return
+        idx = getattr(req, "_telemetry_idx", None)
+        if idx is None:
+            return
+        rec = self.telemetry[idx]
+        rec.latency = self.now - req.arrival_t
+        rec.ok = ok
+        req._telemetry_idx = None
+
     def record_result(self, req: Request, *, start_t: float, ok: bool,
                       cold: bool, worker: str, instance: str) -> bool:
         """Record a completion for ``req`` (resolving hedge races to the
@@ -735,36 +787,40 @@ class Simulator:
         # rid 0 is falsy, so `or` would misattribute a hedge of request 0
         primary = req.hedged_from if req.hedged_from is not None else req.rid
         if primary in self._finished:
-            return False                 # hedge lost the race
+            # hedge lost the race: no result row, but this attempt's own
+            # telemetry row still resolves (it used to stay at the
+            # placeholder forever)
+            self._resolve_telemetry(req, ok)
+            return False
         self._finished.add(primary)
         res = RequestResult(rid=primary, fn=req.fn, ok=ok,
                             arrival_t=req.arrival_t, start_t=start_t,
                             finish_t=self.now, cold_start=cold,
-                            worker=worker, instance=instance)
+                            worker=worker, instance=instance,
+                            wf=req.wf, stage=req.stage)
         self.results.append(res)
         if self.view.estimator is not None and ok:
             # deadline routing prices backlogs with this windowed
             # observation; fed in result order, so it is deterministic
             self.view.estimator.observe(req.fn, res.service_time)
-        if self.collect_telemetry:
-            rec = self.telemetry[req._telemetry_idx]
-            rec.latency = res.latency
-            rec.ok = ok
-            if req.hedged_from is not None:
-                # the clone won: the primary's row would otherwise stay
-                # at its placeholder latency=0.0, ok=True forever —
-                # resolve it with the primary's end-to-end outcome
-                prim = getattr(req, "_primary", None)
-                pidx = getattr(prim, "_telemetry_idx", None)
-                if pidx is not None:
-                    prec = self.telemetry[pidx]
-                    prec.latency = self.now - prim.arrival_t
-                    prec.ok = ok
+        self._resolve_telemetry(req, ok)
+        if req.hedged_from is not None:
+            # the clone won: resolve the primary's row with the same
+            # end-to-end outcome (same latency math: now - arrival)
+            prim = getattr(req, "_primary", None)
+            if prim is not None:
+                self._resolve_telemetry(prim, ok)
+        if self.workflows is not None and req.wf is not None:
+            self.workflows.on_stage_done(self, req, ok, worker)
         return True
 
     def _record_fail(self, req: Request, err: str):
         primary = req.hedged_from if req.hedged_from is not None else req.rid
         if primary in self._finished:
+            # hedge race already settled: no result row, but this losing
+            # attempt's own telemetry row still resolves (exactly-once
+            # keeps the settled primary row untouched)
+            self._resolve_telemetry(req, False)
             return
         # retry budget: resurrect infrastructure failures with capped
         # exponential backoff. Hedge clones don't retry (the primary's
@@ -789,7 +845,18 @@ class Simulator:
         self.results.append(RequestResult(
             rid=primary, fn=req.fn, ok=False, arrival_t=req.arrival_t,
             start_t=self.now, finish_t=self.now, cold_start=False,
-            worker=getattr(req, "_worker", "?"), instance="-", error=err))
+            worker=getattr(req, "_worker", "?"), instance="-", error=err,
+            wf=req.wf, stage=req.stage))
+        # failed rows used to keep their placeholder latency=0.0,
+        # ok=True, poisoning the RQ-B training set with "instant
+        # successes" — resolve them exactly like completions do
+        self._resolve_telemetry(req, False)
+        if req.hedged_from is not None:
+            prim = getattr(req, "_primary", None)
+            if prim is not None:
+                self._resolve_telemetry(prim, False)
+        if self.workflows is not None and req.wf is not None:
+            self.workflows.on_stage_done(self, req, False, None)
 
 
 # ---------------------------------------------------------------------------

@@ -41,10 +41,23 @@ class Request:
     size: int = 16                     # prompt tokens (cost driver)
     rid: int = field(default_factory=lambda: next(_req_ids))
     hedged_from: Optional[int] = None  # straggler-mitigation clone marker
-    # absolute completion deadline (arrival + the function's slo_p95_s),
-    # stamped by the workload layer; None => no latency objective.
-    # deadline_aware routing scores branches against the remaining slack.
+    # absolute completion deadline (arrival + the function's slo_p95_s —
+    # or, for a workflow stage, the stage's share of the end-to-end
+    # workflow SLO), stamped by the workload layer; None => no latency
+    # objective. deadline_aware routing scores branches against the
+    # remaining slack.
     deadline_t: Optional[float] = None
+    # ---- workflow identity (repro.workloads.workflows) --------------
+    # None/False for plain invocations: a request that is one stage task
+    # of a composed workflow carries its DAG context so workflow_aware
+    # routing can see the critical path.
+    wf: Optional[int] = None           # workflow instance id
+    stage: Optional[str] = None        # stage name within the DAG
+    wf_task: int = 0                   # task index within the stage fan-out
+    wf_critical: bool = False          # stage lies on the DAG critical path
+    # (worker, leaf-branch) that served the completion triggering this
+    # stage — the co-location target for chained stages
+    wf_affinity: Optional[tuple] = None
 
 
 @dataclass
@@ -59,6 +72,10 @@ class RequestResult:
     worker: str
     instance: str
     error: str = ""
+    # workflow identity carried through from the request (None for
+    # plain invocations) — lets analysis group stage tasks per instance
+    wf: Optional[int] = None
+    stage: Optional[str] = None
 
     @property
     def latency(self) -> float:

@@ -397,9 +397,13 @@ class WorkerRuntime:
             if util > cfg.util_scale_threshold:
                 sim._maybe_start_instance(w, cfg)
         if sim.collect_telemetry:
-            rec = sim.telemetry[req._telemetry_idx]
-            rec.batch_size = inst.busy
-            rec.cold = cold
+            # a retried request that originally failed *before* routing
+            # ("no healthy workers" at arrival) has no telemetry row
+            idx = getattr(req, "_telemetry_idx", None)
+            if idx is not None:
+                rec = sim.telemetry[idx]
+                rec.batch_size = inst.busy
+                rec.cold = cold
         faults = sim.faults
         if faults is not None and faults.drop_finish(req, w):
             # chaos layer: the completion is lost — no finish event; the

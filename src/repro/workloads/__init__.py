@@ -12,6 +12,10 @@ from repro.workloads.azure import (azure_trace_arrivals, azure_trace_iats,
 from repro.workloads.scenarios import (SCENARIOS, build_scenario,
                                        install_demo_configs, list_scenarios,
                                        register_scenario)
+from repro.workloads.workflows import (StageSpec, WorkflowEngine,
+                                       WorkflowResult, WorkflowSpec,
+                                       WorkflowWorkload,
+                                       summarize_workflows)
 from repro.workloads.workload import (FunctionProfile, MixedWorkload,
                                       SizeDist)
 
@@ -24,4 +28,6 @@ __all__ = [
     "SCENARIOS", "build_scenario", "list_scenarios", "register_scenario",
     "install_demo_configs",
     "FunctionProfile", "MixedWorkload", "SizeDist",
+    "StageSpec", "WorkflowSpec", "WorkflowWorkload", "WorkflowEngine",
+    "WorkflowResult", "summarize_workflows",
 ]

@@ -171,6 +171,56 @@ def retry_storm(*, rps: float = 400.0, duration_s: float = 10.0,
     return wl
 
 
+@register_scenario("ml_pipeline")
+def ml_pipeline(*, rps: float = 30.0, duration_s: float = 20.0,
+                seed: int = 1, slo_s: float = 2.0, audit_prob: float = 0.3,
+                rid_base: int = 0, prewarm_next: bool = True):
+    """Workflow scenario: the canonical inference chain. ``preprocess →
+    infer → postprocess`` is the critical path (``infer`` dominates);
+    ``audit`` is a conditional side branch off ``preprocess`` that only
+    some instances take. The shape where critical-path-aware routing
+    diverges from stage-blind deadline routing: warm capacity for the
+    heavy middle stage is scarce, and a cold start there moves the
+    end-to-end deadline one-for-one."""
+    from repro.workloads.workflows import (StageSpec, WorkflowSpec,
+                                           WorkflowWorkload)
+    spec = WorkflowSpec("ml_pipeline", stages=(
+        StageSpec("preprocess", fn="preprocess",
+                  size=SizeDist.uniform(8, 24), weight=1.0),
+        StageSpec("infer", fn="infer", deps=("preprocess",),
+                  size=SizeDist.lognormal(48, 0.4), weight=4.0),
+        StageSpec("postprocess", fn="postprocess", deps=("infer",),
+                  size=SizeDist.const(16), weight=1.0),
+        StageSpec("audit", fn="audit", deps=("preprocess",),
+                  size=SizeDist.const(8), weight=0.5, prob=audit_prob),
+    ), slo_s=slo_s)
+    return WorkflowWorkload(PoissonArrivals(rps), spec,
+                            duration_s=duration_s, seed=seed,
+                            rid_base=rid_base, prewarm_next=prewarm_next)
+
+
+@register_scenario("etl_fanout")
+def etl_fanout(*, rps: float = 12.0, duration_s: float = 20.0,
+               seed: int = 1, maps: int = 8, slo_s: float = 2.5,
+               rid_base: int = 0, prewarm_next: bool = True):
+    """Workflow scenario: map-reduce. ``split`` fans out to ``maps``
+    parallel ``map`` tasks whose join gates ``reduce`` — end-to-end
+    latency is the *slowest* map task, so one straggling cold start on
+    the fan-out blows the whole instance's deadline."""
+    from repro.workloads.workflows import (StageSpec, WorkflowSpec,
+                                           WorkflowWorkload)
+    spec = WorkflowSpec("etl_fanout", stages=(
+        StageSpec("split", fn="split", size=SizeDist.const(32), weight=1.0),
+        StageSpec("map", fn="map", deps=("split",), fanout=maps,
+                  size=SizeDist.uniform(16, 64), weight=2.0),
+        StageSpec("reduce", fn="reduce", deps=("map",),
+                  size=SizeDist.const(48), weight=1.5),
+    ), slo_s=slo_s)
+    return WorkflowWorkload(PoissonArrivals(rps), spec,
+                            duration_s=duration_s, seed=seed,
+                            rid_base=rid_base, prewarm_next=prewarm_next)
+
+
 @register_scenario("trace_replay")
 def trace_replay(*, path: str, fn: str = "fn", fmt: str = "iat",
                  duration_s: Optional[float] = None, loop: bool = False,
@@ -213,6 +263,15 @@ _DEMO_CFG = {
     "chat": ("tiny_lm", 4, 0.15),
     "embed": ("tiny_lm", 8, 0.10),
     "batch": ("small_lm", 1, 0.40),
+    # workflow stage functions (ml_pipeline / etl_fanout): the heavy
+    # middle stages carry the expensive cold starts
+    "preprocess": ("tiny_lm", 4, 0.15),
+    "infer": ("small_lm", 2, 0.45),
+    "postprocess": ("tiny_lm", 4, 0.15),
+    "audit": ("tiny_lm", 2, 0.25),
+    "split": ("tiny_lm", 4, 0.20),
+    "map": ("tiny_lm", 4, 0.30),
+    "reduce": ("tiny_lm", 2, 0.35),
 }
 
 

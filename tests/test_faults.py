@@ -134,6 +134,83 @@ def test_hedge_clone_win_resolves_primary_telemetry():
     assert prim_rows[0].latency >= res[0].latency > 0.0
 
 
+# ----------------------- ISSUE-7 failure-path telemetry / retry bugfixes
+def test_failed_request_resolves_telemetry_row():
+    """A request that fails (worker died in-flight) must resolve its
+    telemetry row to ``ok=False`` with the end-to-end latency — the
+    failure path used to leave the placeholder ``latency=0.0, ok=True``,
+    poisoning the RQ-B training set with instant successes."""
+    sim = _one_worker_sim()
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    sim.inject_failure("w0", at=0.02, recover_after=100.0)
+    res = sim.run()
+    assert len(res) == 1 and not res[0].ok
+    rows = [t for t in sim.telemetry if t.fn == "fn"]
+    assert len(rows) == 1
+    assert rows[0].ok is False
+    assert rows[0].latency == pytest.approx(res[0].finish_t
+                                            - res[0].arrival_t)
+    # the sweep the ISSUE pins: no row anywhere ends at the placeholder
+    assert not any(t.latency == 0.0 and t.ok for t in sim.telemetry)
+
+
+def test_retry_after_dark_fleet_at_arrival_recovers():
+    """Arrival while *no* worker is healthy fails before routing, so no
+    telemetry row exists; when the retry budget resurrects the request
+    after the fleet recovers, the completion used to dereference the
+    missing row index and crash. The retry must just succeed."""
+    sim = _one_worker_sim(retry_budget=2, retry_backoff_s=0.5)
+    sim.inject_failure("w0", at=0.0, recover_after=0.2)
+    sim.submit(Request(fn="fn", arrival_t=0.05, rid=0))   # fleet dark
+    res = sim.run()
+    assert len(res) == 1 and res[0].ok
+    assert sim.retries_scheduled == 1
+    # recovery (t=0.2) beat the backoff expiry (t=0.55): served warm path
+    assert res[0].finish_t > 0.55
+    assert not any(t.latency == 0.0 and t.ok for t in sim.telemetry)
+
+
+def test_hedge_clone_rids_deterministic_across_runs():
+    """Hedge clones derive their rid from the primary (``-rid - 1``),
+    not the process-global id counter — two same-seed runs in one
+    process must produce byte-identical routing logs (the counter kept
+    advancing across runs, renaming every clone in the second run)."""
+    def run():
+        store = _store(concurrency=1, cold_start_s=0.0)
+        sim = Simulator(build_leaf("b", ["w0", "w1"], "least_loaded"),
+                        store, SyntheticServiceModel(seed=2), seed=5,
+                        hedge_after_s=0.02, record_decisions=True)
+        sim.set_straggler("w0", 50.0)
+        for i in range(4):      # explicit rids, as the workload layer uses
+            sim.submit(Request(fn="fn", arrival_t=0.01 * i, rid=i))
+        sim.run()
+        return sim
+    a, b = run(), run()
+    assert a.hedges_seen > 0
+    log_a, log_b = a.routing_log(), b.routing_log()
+    assert "rid=-" in log_a            # clones route under derived ids
+    assert log_a == log_b
+
+
+def test_hedge_clones_not_counted_as_arrivals():
+    """Hedge clones are the platform's own speculation, not offered
+    load: they must land in ``hedges_seen``, never in ``arrivals_seen``
+    / ``arrivals_by_fn`` — counting them fed the autoscaler synthetic
+    demand that grew with its own hedging."""
+    store = _store(concurrency=1, cold_start_s=0.0)
+    sim = Simulator(build_leaf("b", ["w0", "w1"], "least_loaded"), store,
+                    SyntheticServiceModel(seed=2), seed=5,
+                    hedge_after_s=0.02)
+    sim.set_straggler("w0", 50.0)
+    n = 6
+    for i in range(n):
+        sim.submit(Request(fn="fn", arrival_t=0.01 * i))
+    sim.run()
+    assert sim.hedges_seen > 0
+    assert sim.arrivals_seen == n
+    assert sum(sim.arrivals_by_fn.values()) == n
+
+
 # -------------------------------------------- bugfix 4: p95 nearest-rank
 def test_latency_estimator_p95_nearest_rank():
     est = LatencyEstimator(maxlen=200)

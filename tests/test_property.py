@@ -242,6 +242,17 @@ def test_event_backends_drain_in_identical_order(seed):
     assert run_event_backend_ops(seed) > 0
 
 
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_workflow_dag_execution(seed):
+    """ISSUE-7 workflow invariants on random DAGs: active stages run
+    exactly their fan-out width, skipped conditionals run nothing,
+    joins wait for their last active transitive predecessor, every
+    instance completes, and same-seed runs are byte-identical."""
+    from _prop_drivers import run_workflow_dag_ops
+    assert run_workflow_dag_ops(seed) > 0
+
+
 @given(st.integers(0, 10**6), st.integers(0, 10**6))
 @settings(max_examples=50, deadline=None)
 def test_data_stream_deterministic(step, seed):

@@ -141,14 +141,16 @@ def _scenario_sim(scenario, model, *, workers=8, sim_kw=None, cfg_over=None,
 # digests recorded from the pre-refactor flat-scan simulator (seed PR 2
 # tree) on the exact configurations below; the indexed scheduling core
 # must not move a single byte of the result/telemetry stream.
-# Exception: "hedged" was re-recorded once for the hedge-telemetry
-# bugfix (a winning clone now resolves the primary's telemetry row,
-# which the digest covers); results are unchanged
+# Exception: "hedged" has been re-recorded for the hedge-telemetry
+# bugfixes (a winning clone resolves the primary's telemetry row, and
+# losing attempts now resolve their own rows instead of staying at the
+# latency=0.0/ok=True placeholder — both covered by the digest); the
+# result stream is unchanged.
 GOLDEN = {
     "steady": "90ac57f36c579d36",
     "multi_tenant": "ec5034f85267151c",
     "timeouts": "f76ce8e2854a36ad",
-    "hedged": "d6c54841ec84b4d9",
+    "hedged": "9faa3bd780d5e7b0",
     "unlimited": "080aa05e2b950234",
     "queue_len_model": "1b2f33ae54ee62d1",
 }
