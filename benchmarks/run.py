@@ -257,6 +257,52 @@ def bench_workload_scenarios():
          f"p99_ms={s['p99']*1e3:.1f};fail={s['fail_rate']:.4f}")
 
 
+def bench_workload_generation():
+    """ISSUE-8 micro-probe: scalar (`requests()`) vs vectorized
+    (`generate_bulk`) generation requests/s, per arrival kind, at the
+    ~1M-request scale. CI gates bulk >= 10x scalar on the poisson row
+    (WORKLOAD_GEN_PROBE_S scales the horizon for local runs)."""
+    from repro.workloads import (BurstyArrivals, DiurnalArrivals,
+                                 FunctionProfile, MixedWorkload,
+                                 PoissonArrivals, SizeDist, TraceArrivals)
+    dur = float(os.environ.get("WORKLOAD_GEN_PROBE_S", "50"))
+    rate = 20000.0                         # 20k rps x 50 s = 1M requests
+    profiles = [
+        FunctionProfile("interactive", weight=3.0,
+                        size=SizeDist.lognormal(24, 0.6), slo_p95_s=0.5),
+        FunctionProfile("batch", weight=1.0,
+                        size=SizeDist.uniform(64, 512)),
+        FunctionProfile("ping", weight=1.0, size=SizeDist.const(4)),
+    ]
+    kinds = {
+        "poisson": PoissonArrivals(rate),
+        "bursty": BurstyArrivals(rate_on=3.0 * rate, rate_off=rate / 3.0,
+                                 mean_on_s=0.5, mean_off_s=1.0),
+        "diurnal": DiurnalArrivals(base_rate=rate, amplitude=0.8,
+                                   period_s=dur),
+        "trace": TraceArrivals([1.0 / rate] * 997, loop=True),
+    }
+    speedups = {}
+    for name in sorted(kinds):
+        wl = MixedWorkload(kinds[name], profiles, duration_s=dur, seed=3)
+        t0 = time.perf_counter()
+        n_scalar = sum(1 for _ in wl.requests())
+        t_scalar = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        batch = wl.generate_bulk()
+        t_bulk = time.perf_counter() - t0
+        scalar_rps = n_scalar / t_scalar
+        bulk_rps = len(batch) / t_bulk
+        speedups[name] = bulk_rps / scalar_rps
+        _row(f"workload_gen_{name}", 1e6 * t_bulk / max(1, len(batch)),
+             f"n_scalar={n_scalar};n_bulk={len(batch)};"
+             f"scalar_req_per_s={scalar_rps:.0f};"
+             f"bulk_req_per_s={bulk_rps:.0f};"
+             f"speedup={bulk_rps / scalar_rps:.1f}x")
+    _row("workload_gen_speedup_min", 0.0,
+         f"min_over_kinds={min(speedups.values()):.1f}x")
+
+
 def bench_autoscaler_scenarios():
     """Autoscaler policy menu vs the paper's static replicate recipe under
     `flash_crowd` and `daily_cycle` (repro.autoscale). Reports p95,
@@ -524,7 +570,7 @@ def bench_event_backends():
         return n, pops, t_load, wall, sample
 
     dur = float(os.environ.get("EVENT_BACKEND_PROBE_S", "505"))
-    rates, hashes = {}, {}
+    rates, hashes, scalar_e2e = {}, {}, {}
     for backend in ("single_heap", "sharded"):
         engine_probe(backend, 200, 20.0)   # warmup: page/arena state
         n, pops, t_load, wall, sample = engine_probe(backend, 2000, dur)
@@ -533,14 +579,115 @@ def bench_event_backends():
                 f"acceptance probe must drive >=10M requests, got {n}"
         rates[backend] = pops / wall
         hashes[backend] = sample
+        # load_s covers scalar generation + ingest interleaved, so
+        # end_to_end is the full generate-and-simulate rate the bulk
+        # pipeline below is gated against
+        scalar_e2e[backend] = pops / (t_load + wall)
         _row(f"event_engine_{backend}", 1e6 * wall / n,
              f"requests={n};events={pops};events_per_s={pops / wall:.0f};"
+             f"end_to_end_events_per_s={pops / (t_load + wall):.0f};"
              f"load_s={t_load:.1f};run_s={wall:.1f}")
     assert hashes["sharded"] == hashes["single_heap"], \
         "backends popped different (t, seq) streams"
     _row("event_engine_speedup", 0.0,
          f"sharded_over_single_heap="
          f"{rates['sharded'] / rates['single_heap']:.2f}x")
+
+    # ---- ISSUE-8 bulk mode: generate_bulk + push_bulk + pop_batch,
+    # the same 10M-request Azure-style probe end to end through the
+    # vectorized pipeline (own numpy determinism contract, so the
+    # cross-backend hash witness is checked *within* the bulk mode)
+    from repro.workloads import (FunctionProfile, MixedWorkload,
+                                 PoissonArrivals, SizeDist)
+
+    def make_streams(streams, duration_s):
+        profile = [FunctionProfile("fn", size=SizeDist.const(16))]
+        return [MixedWorkload(PoissonArrivals(10.0), profile,
+                              duration_s=duration_s, seed=100 + s)
+                for s in range(streams)]
+
+    def bulk_probe(backend, streams, duration_s):
+        eng = EventEngine(backend)
+        t0 = time.perf_counter()
+        arrival_runs = [wl.generate_bulk().arrival_t
+                        for wl in make_streams(streams, duration_s)]
+        n = sum(len(r) for r in arrival_runs)
+        t_gen = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for times in arrival_runs:         # tenant-by-tenant bulk ingest
+            eng.push_bulk(times, "arrival", None)
+        t_load = time.perf_counter() - t0
+        drng = _random.Random(7).random
+        sample = 0
+        pops = 0
+        pop_batch = eng.pop_batch
+        push_bulk = eng.push_bulk
+        t0 = time.perf_counter()
+        while True:
+            batch = pop_batch(8192)
+            if not batch:
+                break
+            # one comprehension pass per kind beats a per-event dispatch
+            # loop; batch partitions are backend-identical (greedy
+            # pop_batch contract), so the strided witness below samples
+            # the same global every-997th events on every backend
+            enq = [e[0] + hop_s for e in batch if e[2] == "arrival"]
+            fin = [e[0] + 0.004 + 0.01 * drng()
+                   for e in batch if e[2] == "enqueue"]
+            idle = [e[0] + idle_s for e in batch if e[2] == "finish"]
+            for e in batch[(996 - pops) % 997::997]:
+                sample ^= hash((e[0], e[1]))
+            pops += len(batch)
+            if enq:
+                push_bulk(enq, "enqueue", None)
+            if fin:
+                push_bulk(fin, "finish", None)
+            if idle:
+                push_bulk(idle, "idle_check", None)
+        wall = time.perf_counter() - t0
+        return n, pops, t_gen, t_load, wall, sample
+
+    # scalar generation baseline at the same request volume: the real
+    # per-request path sim.load walks (one Mersenne draw chain + one
+    # Request object per arrival)
+    t0 = time.perf_counter()
+    n_scalar_gen = 0
+    for wl in make_streams(2000, dur):
+        for _ in wl.requests():
+            n_scalar_gen += 1
+    scalar_gen_rps = n_scalar_gen / (time.perf_counter() - t0)
+
+    bulk_e2e, bulk_hashes = {}, {}
+    gen_rps = 0.0
+    for backend in ("single_heap", "sharded"):
+        bulk_probe(backend, 200, 20.0)     # warmup
+        n, pops, t_gen, t_load, wall, sample = bulk_probe(backend, 2000,
+                                                          dur)
+        gen_rps = n / t_gen
+        bulk_e2e[backend] = pops / (t_gen + t_load + wall)
+        bulk_hashes[backend] = sample
+        _row(f"event_engine_bulk_{backend}",
+             1e6 * (t_gen + t_load + wall) / n,
+             f"requests={n};events={pops};gen_s={t_gen:.1f};"
+             f"gen_req_per_s={n / t_gen:.0f};load_s={t_load:.1f};"
+             f"run_s={wall:.1f};events_per_s={pops / wall:.0f};"
+             f"end_to_end_events_per_s={bulk_e2e[backend]:.0f}")
+    assert bulk_hashes["sharded"] == bulk_hashes["single_heap"], \
+        "bulk pipeline popped different (t, seq) streams across backends"
+    gen_speedup = gen_rps / scalar_gen_rps
+    e2e_speedup = bulk_e2e["sharded"] / scalar_e2e["sharded"]
+    _row("event_engine_bulk_speedup", 0.0,
+         f"generation_bulk_over_scalar={gen_speedup:.1f}x;"
+         f"end_to_end_bulk_sharded_over_scalar_sharded="
+         f"{e2e_speedup:.2f}x;"
+         f"end_to_end_bulk_sharded_over_scalar_single_heap="
+         f"{bulk_e2e['sharded'] / scalar_e2e['single_heap']:.2f}x;"
+         f"scalar_gen_req_per_s={scalar_gen_rps:.0f}")
+    if dur >= 505:                         # ISSUE-8 acceptance gates
+        assert gen_speedup >= 10.0, \
+            f"bulk generation {gen_speedup:.1f}x < 10x scalar"
+        assert e2e_speedup >= 3.0, \
+            f"bulk end-to-end {e2e_speedup:.2f}x < 3x scalar sharded"
 
     if not os.environ.get("EVENT_BACKEND_SIM_PROBE"):
         return
@@ -629,14 +776,38 @@ def roofline_table():
 
 BENCHES = [bench_tree_scaling, bench_lb_policies, bench_concurrency,
            bench_emulation, bench_serving_engine, bench_kernels,
-           bench_workload_scenarios, bench_autoscaler_scenarios,
-           bench_placement, bench_fault_scenarios, bench_workflows,
-           bench_event_backends, bench_sim_throughput, roofline_table]
+           bench_workload_scenarios, bench_workload_generation,
+           bench_autoscaler_scenarios, bench_placement,
+           bench_fault_scenarios, bench_workflows, bench_event_backends,
+           bench_sim_throughput, roofline_table]
 
 
-def main() -> None:
+def _usage() -> str:
+    return ("usage: python benchmarks/run.py [probe-substring]\n"
+            "probes: " + " ".join(b.__name__.removeprefix("bench_")
+                                  for b in BENCHES))
+
+
+def main(argv=None) -> None:
+    # strict arg handling: a flag-like or unmatched argument used to
+    # fall through as a probe name, run zero probes, and write a junk
+    # artifact (results_--help.json) — reject it loudly instead
+    argv = sys.argv[1:] if argv is None else argv
+    only = None
+    if argv:
+        if argv[0] in ("-h", "--help"):
+            print(_usage())
+            return
+        if len(argv) > 1 or argv[0].startswith("-"):
+            print(f"unexpected arguments: {' '.join(argv)}\n{_usage()}",
+                  file=sys.stderr)
+            sys.exit(2)
+        only = argv[0]
+        if not any(only in b.__name__ for b in BENCHES):
+            print(f"no benchmark matches {only!r}\n{_usage()}",
+                  file=sys.stderr)
+            sys.exit(2)
     print("name,us_per_call,derived")
-    only = sys.argv[1] if len(sys.argv) > 1 else None
     for b in BENCHES:
         if only and only not in b.__name__:
             continue

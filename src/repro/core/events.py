@@ -33,7 +33,14 @@ seq)`` a total order: payloads are never compared.
 from __future__ import annotations
 
 import heapq
+import itertools
+from bisect import bisect_left, bisect_right
+from itertools import repeat as _repeat
 from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+_INF = float("inf")
 
 Event = Tuple[float, int, str, object]
 
@@ -88,6 +95,40 @@ class EventQueue:
             return None
         return self.pop()
 
+    def push_bulk_run(self, times, seq0: int, kind: str,
+                      payloads=None) -> None:
+        """Bulk-push one same-kind run: entry ``i`` is ``(times[i],
+        seq0 + i, kind, payloads[i])`` (``None`` payloads throughout
+        when ``payloads`` is None). Must be order-identical to pushing
+        the entries one by one — this reference implementation does
+        exactly that; backends override with batch paths."""
+        if hasattr(times, "tolist"):           # numpy -> Python floats
+            times = times.tolist()
+        if payloads is None:
+            seq = seq0
+            for t in times:
+                self.push((t, seq, kind, None))
+                seq += 1
+        else:
+            for seq, (t, p) in enumerate(zip(times, payloads), start=seq0):
+                self.push((t, seq, kind, p))
+
+    def pop_batch(self, max_n: int,
+                  until: Optional[float] = None) -> List[Event]:
+        """Pop up to ``max_n`` events in ``(t, seq)`` order, stopping
+        early only at the ``until`` horizon or an empty queue. Greedy
+        by contract — every backend returns exactly
+        ``min(max_n, available-within-horizon)`` entries, so batch
+        *partitions* (not just the concatenated stream) are
+        backend-identical."""
+        out: List[Event] = []
+        while len(out) < max_n:
+            entry = self.pop_until(until)
+            if entry is None:
+                break
+            out.append(entry)
+        return out
+
     def __len__(self) -> int:
         raise NotImplementedError
 
@@ -122,6 +163,37 @@ class SingleHeapQueue(EventQueue):
         if not heap or (until is not None and heap[0][0] > until):
             return None
         return heapq.heappop(heap)
+
+    def push_bulk_run(self, times, seq0: int, kind: str,
+                      payloads=None) -> None:
+        # heapify-based reference: an empty heap takes the whole run in
+        # O(n); otherwise per-entry sift. Either way the heap's pop
+        # order is the (t, seq) total order — identical to per-push.
+        if hasattr(times, "tolist"):
+            times = times.tolist()
+        entries = zip(times, range(seq0, seq0 + len(times)), _repeat(kind),
+                      payloads if payloads is not None else _repeat(None))
+        heap = self._heap
+        if heap:
+            push = heapq.heappush
+            for e in entries:
+                push(heap, e)
+        else:
+            heap.extend(entries)
+            heapq.heapify(heap)
+
+    def pop_batch(self, max_n: int,
+                  until: Optional[float] = None) -> List[Event]:
+        heap = self._heap
+        out: List[Event] = []
+        pop = heapq.heappop
+        if until is None:
+            for _ in range(min(max_n, len(heap))):
+                out.append(pop(heap))
+        else:
+            while len(out) < max_n and heap and heap[0][0] <= until:
+                out.append(pop(heap))
+        return out
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -164,15 +236,16 @@ class ShardedQueue(EventQueue):
 
     kind = "sharded"
 
-    __slots__ = ("bucket_s", "target_per_bucket", "_staged", "_width",
-                 "_runs", "_heaps", "_active", "_cur", "_cur_end",
-                 "_cur_run", "_cur_pos", "_cur_heap", "_len")
+    __slots__ = ("bucket_s", "target_per_bucket", "_staged", "_bulk",
+                 "_width", "_runs", "_heaps", "_active", "_cur",
+                 "_cur_end", "_cur_run", "_cur_pos", "_cur_heap", "_len")
 
     def __init__(self, bucket_s: Optional[float] = None,
                  target_per_bucket: int = 4096):
         self.bucket_s = bucket_s           # None => size from staged span
         self.target_per_bucket = target_per_bucket
         self._staged: Optional[list] = []  # None once sealed
+        self._bulk: list = []              # staged columnar runs (ISSUE-8)
         self._width = bucket_s or 0.01
         self._runs: Dict[int, list] = {}   # future idx -> sorted staged slice
         self._heaps: Dict[int, list] = {}  # future idx -> overflow heap
@@ -189,28 +262,96 @@ class ShardedQueue(EventQueue):
 
     # ------------------------------------------------------------ internals
     def _seal(self) -> None:
-        """Cut the staged bulk load into per-bucket sorted runs."""
+        """Cut the staged bulk load into per-bucket sorted runs.
+
+        Scalar staged entries keep the original adaptive-sort path
+        byte-for-byte. Columnar runs staged via ``push_bulk_run`` take
+        the vectorized path: entry tuples are built exactly once, the
+        global order comes from one ``np.lexsort`` over ``(t, seq)`` —
+        or no sort at all when run concatenation is already globally
+        nondecreasing (the multi-stream ascending-ingest common case;
+        concat order is seq order because the engine stamps runs
+        monotonically) — and bucket cuts come from one vectorized
+        index-change scan instead of a per-entry Python loop."""
         staged = self._staged
+        bulk = self._bulk
         self._staged = None
-        if not staged:
-            return
-        staged.sort()
+        self._bulk = []
+        ts = None                          # numpy times iff vector path
+        if not bulk:
+            if not staged:
+                return
+            staged.sort()
+            entries = staged
+        else:
+            times = (bulk[0][0] if len(bulk) == 1 else
+                     np.concatenate([r[0] for r in bulk]))
+            kinds = {r[2] for r in bulk}
+            if (not staged and len(kinds) == 1
+                    and all(r[3] is None for r in bulk)):
+                # column fast path (the pre-loaded-arrivals shape: one
+                # kind, no payloads): sort the columns, then build the
+                # tuples already in order — no per-entry gather
+                seqs = (np.arange(bulk[0][1], bulk[0][1] + len(times))
+                        if len(bulk) == 1 else
+                        np.concatenate([np.arange(s0, s0 + len(t_arr))
+                                        for t_arr, s0, _k, _p in bulk]))
+                if not bool(np.all(times[:-1] <= times[1:])):
+                    order = np.lexsort((seqs, times))
+                    times, seqs = times[order], seqs[order]
+                ts = times
+                entries = list(zip(times.tolist(), seqs.tolist(),
+                                   _repeat(next(iter(kinds))),
+                                   _repeat(None)))
+            else:
+                chunks = [zip(t_arr.tolist(), range(s0, s0 + len(t_arr)),
+                              _repeat(kind),
+                              pl if pl is not None else _repeat(None))
+                          for t_arr, s0, kind, pl in bulk]
+                entries = (list(chunks[0]) if len(chunks) == 1 else
+                           list(itertools.chain.from_iterable(chunks)))
+                if staged:
+                    # scalar pushes interleaved with bulk runs while
+                    # staging (e.g. an autoscale tick armed before
+                    # load_bulk): rare and small — merge through the
+                    # adaptive sort
+                    entries.extend(staged)
+                    entries.sort()
+                elif bool(np.all(times[:-1] <= times[1:])):
+                    ts = times
+                else:
+                    seqs = np.concatenate(
+                        [np.arange(s0, s0 + len(t_arr))
+                         for t_arr, s0, _k, _p in bulk])
+                    order = np.lexsort((seqs, times))
+                    entries = [entries[i] for i in order.tolist()]
+                    ts = times[order]
         if self.bucket_s is None:
-            span = staged[-1][0] - staged[0][0]
-            buckets = max(1, len(staged) // self.target_per_bucket)
+            span = entries[-1][0] - entries[0][0]
+            buckets = max(1, len(entries) // self.target_per_bucket)
             self._width = max(span / buckets, 1e-9)
         width = self._width
         runs, active = self._runs, self._active
-        lo = 0
-        idx = int(staged[0][0] / width)
-        for i, entry in enumerate(staged):
-            j = int(entry[0] / width)
-            if j != idx:
-                runs[idx] = staged[lo:i]
-                active.append(idx)
-                lo, idx = i, j
-        runs[idx] = staged[lo:]
-        active.append(idx)
+        if ts is not None:
+            # C-cast truncation matches int() for every float, so both
+            # paths agree on bucket indices
+            idx = (ts / width).astype(np.int64)
+            starts = [0, *(np.flatnonzero(idx[1:] != idx[:-1]) + 1).tolist()]
+            bounds = [*starts, len(entries)]
+            for lo, hi in zip(bounds, bounds[1:]):
+                runs[int(idx[lo])] = entries[lo:hi]
+                active.append(int(idx[lo]))
+        else:
+            lo = 0
+            idx = int(entries[0][0] / width)
+            for i, entry in enumerate(entries):
+                j = int(entry[0] / width)
+                if j != idx:
+                    runs[idx] = entries[lo:i]
+                    active.append(idx)
+                    lo, idx = i, j
+            runs[idx] = entries[lo:]
+            active.append(idx)
         heapq.heapify(active)
 
     def _head(self):
@@ -247,6 +388,7 @@ class ShardedQueue(EventQueue):
         """Fully drained: return to staging so the next bulk load
         re-tunes the bucket width to its own horizon."""
         self._staged = []
+        self._bulk = []
         self._runs.clear()
         self._heaps.clear()
         self._active.clear()
@@ -289,6 +431,184 @@ class ShardedQueue(EventQueue):
                 heapq.heappush(self._active, idx)
             return
         heapq.heappush(heap, entry)
+
+    def push_bulk_run(self, times, seq0: int, kind: str,
+                      payloads=None) -> None:
+        n = len(times)
+        if n == 0:
+            return
+        self._len += n
+        if self._staged is not None:
+            # staging: keep the run columnar — _seal merges every run
+            # (plus any scalar staged entries) without per-entry heap
+            # discipline or double tuple builds
+            self._bulk.append(
+                (np.ascontiguousarray(times, dtype=np.float64), seq0,
+                 kind, None if payloads is None else list(payloads)))
+            return
+        # sealed: near-now follow-on runs (the batched-drain pattern).
+        # Small runs route per entry with the draining-bucket fast path
+        # inlined; big runs take the vectorized merge below, which keeps
+        # follow-ons on the sorted-run slice path instead of feeding the
+        # overflow heaps one sift at a time
+        if n < 64:
+            if hasattr(times, "tolist"):
+                times = times.tolist()
+            entries = zip(times, range(seq0, seq0 + n), _repeat(kind),
+                          payloads if payloads is not None else _repeat(None))
+            cur_end = self._cur_end
+            cur_heap = self._cur_heap
+            hpush = heapq.heappush
+            for e in entries:
+                if e[0] < cur_end:
+                    if cur_heap is None:
+                        cur_heap = self._cur_heap = [e]
+                    else:
+                        hpush(cur_heap, e)
+                else:
+                    self._len -= 1         # push() re-counts the entry
+                    self.push(e)
+            return
+        self._push_bulk_sealed(times, seq0, kind, payloads)
+
+    def _push_bulk_sealed(self, times, seq0: int, kind: str,
+                          payloads) -> None:
+        """Vectorized sealed-mode bulk insert: split the run into the
+        draining bucket's portion and per-future-bucket pieces (one
+        ``astype`` + group scan), then *merge each piece into the
+        bucket's sorted run* — one adaptive Timsort per piece, folding
+        any overflow heap in along the way — so the subsequent drain
+        slices run prefixes wholesale instead of paying a per-entry
+        ``heappop`` against a deep overflow heap. Order contract is
+        untouched: every bucket still holds ascending ``(t, seq)``."""
+        if isinstance(times, np.ndarray):
+            ts = np.ascontiguousarray(times, dtype=np.float64)
+            tl = ts.tolist()
+        else:                              # list in: no numpy round trip
+            tl = times if isinstance(times, list) else list(times)
+            ts = np.asarray(tl, dtype=np.float64)
+        entries = list(zip(tl, range(seq0, seq0 + len(tl)),
+                           _repeat(kind),
+                           payloads if payloads is not None
+                           else _repeat(None)))
+        cur = self._cur
+        mask_cur = ts < self._cur_end
+        k_cur = int(np.count_nonzero(mask_cur))
+        if k_cur == len(entries):
+            piece, fut_entries, fts = entries, [], None
+        elif k_cur == 0:
+            piece, fut_entries, fts = [], entries, ts
+        elif bool(mask_cur[:k_cur].all()):   # prefix split (sorted run)
+            piece, fut_entries = entries[:k_cur], entries[k_cur:]
+            fts = ts[k_cur:]
+        else:
+            sel = np.flatnonzero(mask_cur).tolist()
+            piece = [entries[i] for i in sel]
+            fut_entries = [e for i, e in enumerate(entries)
+                           if not mask_cur[i]]
+            fts = ts[~mask_cur]
+        if piece:
+            run = self._cur_run
+            if run is not None and self._cur_pos < len(run):
+                piece += run[self._cur_pos:]
+            heap = self._cur_heap
+            if heap:
+                piece += heap
+                self._cur_heap = None
+            piece.sort()
+            self._cur_run = piece
+            self._cur_pos = 0
+        if not fut_entries:
+            return
+        b = (fts / self._width).astype(np.int64)
+        if cur is not None:
+            # float-boundary guard (see push()): never re-activate a
+            # bucket at or behind the drain
+            np.maximum(b, cur + 1, out=b)
+        if bool(np.any(b[:-1] > b[1:])):
+            order = np.argsort(b, kind="stable")
+            fut_entries = [fut_entries[i] for i in order.tolist()]
+            b = b[order]
+        starts = [0, *(np.flatnonzero(b[1:] != b[:-1]) + 1).tolist(),
+                  len(fut_entries)]
+        runs, heaps = self._runs, self._heaps
+        for lo, hi in zip(starts, starts[1:]):
+            bi = int(b[lo])
+            piece = fut_entries[lo:hi]
+            run = runs.get(bi)
+            heap = heaps.pop(bi, None)
+            fresh = run is None and heap is None
+            if run is not None:
+                piece += run
+            if heap:
+                piece += heap
+            piece.sort()
+            runs[bi] = piece
+            if fresh:                      # else already in _active
+                heapq.heappush(self._active, bi)
+
+    def pop_batch(self, max_n: int,
+                  until: Optional[float] = None) -> List[Event]:
+        """Batched bucket drain (the carried ISSUE-5 follow-on): up to
+        ``max_n`` events in exact ``(t, seq)`` order, slicing sorted-run
+        *prefixes* wholesale — bounded by the overflow-heap head and the
+        ``until`` horizon via bisect — instead of entry-at-a-time
+        merges. Greedy like every backend (see the base class): batch
+        partitions are backend-identical."""
+        out: List[Event] = []
+        if self._len == 0:
+            return out
+        if self._staged is not None:
+            self._seal()
+        take = min(max_n, self._len)
+        while take > 0:
+            run = self._cur_run
+            p = self._cur_pos
+            if run is not None and p >= len(run):
+                run = self._cur_run = None
+            heap = self._cur_heap
+            if run is not None:
+                hi = len(run)
+                if heap:
+                    # run entries strictly before the heap head pop in
+                    # run order; (t, seq) never ties so left==right
+                    hi = bisect_left(run, heap[0], p, hi)
+                if until is not None:
+                    # (until, inf) sorts after any (t<=until, seq, ...)
+                    hi = bisect_right(run, (until, _INF), p, hi)
+                if hi - p > take:
+                    hi = p + take
+                if hi > p:
+                    out.extend(run[p:hi])
+                    self._cur_pos = hi
+                    self._len -= hi - p
+                    take -= hi - p
+                    continue
+            if heap:
+                h0 = heap[0]
+                if (run is None or self._cur_pos >= len(run)
+                        or h0 < run[self._cur_pos]):
+                    if until is not None and h0[0] > until:
+                        break
+                    out.append(heapq.heappop(heap))
+                    if not heap:
+                        self._cur_heap = None
+                    self._len -= 1
+                    take -= 1
+                    continue
+                break                      # run head next, but > until
+            if run is not None:
+                break                      # only `until` blocks the run
+            if not self._active:
+                break
+            cur = self._cur = heapq.heappop(self._active)
+            self._cur_end = (cur + 1) * self._width
+            self._cur_run = self._runs.pop(cur, None)
+            self._cur_pos = 0
+            self._cur_heap = self._heaps.pop(cur, None)
+        if self._len == 0:
+            self._restage()
+        return out
 
     def _take(self, entry: Event, from_heap: bool) -> Event:
         self._len -= 1
@@ -360,6 +680,22 @@ class EventEngine:
         self._seq = seq + 1
         self.queue.push((t, seq, kind, payload))
 
+    def push_bulk(self, times, kind: str, payloads=None) -> int:
+        """Bulk-push one same-kind run with contiguous seq stamps:
+        entry ``i`` is ``(times[i], seq0 + i, kind, payloads[i])`` —
+        byte-identical to pushing them one by one in run order, without
+        the per-event call and tuple churn. ``times`` may be a numpy
+        array or a list; returns the number pushed."""
+        n = len(times)
+        if n == 0:
+            return 0
+        seq0 = self._seq
+        self._seq = seq0 + n
+        if kind not in self.background:
+            self.pending_real += n
+        self.queue.push_bulk_run(times, seq0, kind, payloads)
+        return n
+
     def pop(self, until: Optional[float] = None) -> Optional[Event]:
         """Next event in ``(t, seq)`` order, or None if the queue is
         empty or the next event lies beyond ``until`` (left in place)."""
@@ -369,6 +705,24 @@ class EventEngine:
         if entry[2] not in self.background:
             self.pending_real -= 1
         return entry
+
+    def pop_batch(self, max_n: int,
+                  until: Optional[float] = None) -> List[Event]:
+        """Up to ``max_n`` events in ``(t, seq)`` order — the batched
+        drain for replay/probe loops whose handlers never schedule
+        *before* the end of the batch they are consuming. NOT safe for
+        ``Simulator.run()``: its handlers push near-now events (e.g.
+        enqueue at ``t + hop_s``) that may sort before later entries of
+        an already-popped batch."""
+        batch = self.queue.pop_batch(max_n, until)
+        if batch:
+            bg = self.background
+            if bg:
+                self.pending_real -= sum(
+                    1 for e in batch if e[2] not in bg)
+            else:
+                self.pending_real -= len(batch)
+        return batch
 
     def peek_t(self) -> Optional[float]:
         entry = self.queue.peek()

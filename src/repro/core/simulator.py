@@ -580,6 +580,27 @@ class Simulator:
             self.attach_faults(faults)
         return workload.submit_to(self)
 
+    def load_bulk(self, workload, *, chunk: int = 1 << 18) -> int:
+        """Vectorized counterpart of :meth:`load`: generate the
+        workload's columnar ``RequestBatch`` (``generate_bulk``) and
+        stream it into the event engine in ``chunk``-sized bulk runs —
+        same fault-plan attachment and the same ``(t, seq)`` arrival
+        stamps as per-request ``submit`` in arrival order, so the run
+        is byte-identical to the submit loop, without the per-request
+        scalar RNG walk. Also accepts a pre-built ``RequestBatch``.
+        Note the *workload content* follows the bulk determinism
+        contract (numpy streams), not the scalar one."""
+        from repro.workloads.workload import RequestBatch
+        faults = getattr(workload, "faults", None)
+        if faults is not None and self.faults is None:
+            self.attach_faults(faults)
+        batch = (workload if isinstance(workload, RequestBatch)
+                 else workload.generate_bulk())
+        push_bulk = self.engine.push_bulk
+        for sub in batch.iter_chunks(chunk):
+            push_bulk(sub.arrival_t, "arrival", sub.to_requests())
+        return len(batch)
+
     # ---------------------------------------------------------------- run
     def run(self, until: Optional[float] = None):
         """Drive the event engine until empty (or past ``until``).

@@ -17,7 +17,7 @@ from repro.workloads.workflows import (StageSpec, WorkflowEngine,
                                        WorkflowWorkload,
                                        summarize_workflows)
 from repro.workloads.workload import (FunctionProfile, MixedWorkload,
-                                      SizeDist)
+                                      RequestBatch, SizeDist)
 
 __all__ = [
     "ARRIVALS", "ArrivalProcess", "PoissonArrivals", "BurstyArrivals",
@@ -27,7 +27,7 @@ __all__ = [
     "trace_functions",
     "SCENARIOS", "build_scenario", "list_scenarios", "register_scenario",
     "install_demo_configs",
-    "FunctionProfile", "MixedWorkload", "SizeDist",
+    "FunctionProfile", "MixedWorkload", "RequestBatch", "SizeDist",
     "StageSpec", "WorkflowSpec", "WorkflowWorkload", "WorkflowEngine",
     "WorkflowResult", "summarize_workflows",
 ]

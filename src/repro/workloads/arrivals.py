@@ -11,6 +11,14 @@ and the ``random.Random`` handed to :meth:`ArrivalProcess.times` — the
 same seed always yields the same arrival stream, byte for byte. Processes
 never hold hidden RNG state of their own.
 
+Each process also has a vectorized batch path,
+:meth:`ArrivalProcess.times_array`, drawing from a
+``numpy.random.Generator`` instead. The numpy stream cannot reproduce
+the Mersenne scalar stream, so the batch path carries its *own*
+determinism contract (same seed ⇒ byte-identical array, pinned by the
+``RequestBatch`` golden digests in tests/test_bulk.py) while matching
+the scalar path in distribution; the scalar contract is untouched.
+
 All processes yield absolute arrival times strictly inside
 ``[0, duration_s)`` — except :class:`TraceArrivals`, which replays its
 trace verbatim (pass ``duration_s=None`` to replay everything).
@@ -21,6 +29,8 @@ import math
 import random
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Sequence, Type
+
+import numpy as np
 
 ARRIVALS: Dict[str, Type["ArrivalProcess"]] = {}
 
@@ -39,6 +49,28 @@ def get_arrival(kind: str, **params) -> "ArrivalProcess":
     return ARRIVALS[kind](**params)
 
 
+def _poisson_times(rate: float, span: float, np_rng) -> np.ndarray:
+    """Arrival times of a homogeneous Poisson(rate) process on
+    ``[0, span)``, drawn in vectorized chunks: overdraw the expected
+    count by ~4 sigma, cumsum, and top up from the last arrival on the
+    (rare) shortfall — memorylessness makes the continuation exact."""
+    if rate <= 0.0 or span <= 0.0:
+        return np.empty(0, dtype=np.float64)
+    scale = 1.0 / rate
+    chunks = []
+    t_last = 0.0
+    while True:
+        lam = rate * (span - t_last)
+        m = int(lam + 4.0 * math.sqrt(lam + 1.0)) + 16
+        ts = t_last + np.cumsum(np_rng.exponential(scale, m))
+        if ts[-1] >= span:
+            chunks.append(ts[ts < span])
+            break
+        chunks.append(ts)
+        t_last = float(ts[-1])
+    return chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
+
+
 class ArrivalProcess:
     """Base interface: yield absolute arrival times given an RNG."""
 
@@ -47,6 +79,18 @@ class ArrivalProcess:
     def times(self, duration_s: Optional[float],
               rng: random.Random) -> Iterator[float]:
         raise NotImplementedError
+
+    def times_array(self, duration_s: Optional[float],
+                    np_rng: np.random.Generator) -> np.ndarray:
+        """Vectorized counterpart of :meth:`times`: the full arrival
+        stream as one ascending float64 array, drawn from a numpy
+        ``Generator`` (the bulk path's own determinism contract — it
+        does not reproduce the scalar Mersenne stream, only its
+        distribution). Subclasses must override to join the bulk
+        generation fast path (``MixedWorkload.generate_bulk``)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no vectorized times_array; "
+            "implement it to use the bulk generation fast path")
 
     def mean_rate(self) -> float:
         """Long-run average arrivals/s (for envelope sanity checks)."""
@@ -68,6 +112,11 @@ class PoissonArrivals(ArrivalProcess):
             if duration_s is not None and t >= duration_s:
                 return
             yield t
+
+    def times_array(self, duration_s, np_rng):
+        if duration_s is None:
+            raise ValueError("times_array needs a finite duration_s")
+        return _poisson_times(self.rate, duration_s, np_rng)
 
     def mean_rate(self):
         return self.rate
@@ -110,6 +159,31 @@ class BurstyArrivals(ArrivalProcess):
             seg_start = seg_end
             on = not on
 
+    def times_array(self, duration_s, np_rng):
+        # per-phase segments: each dwell is one exponential draw, each
+        # ON/OFF span one vectorized Poisson batch (memorylessness lets
+        # every dwell restart its own clock, exactly like the scalar
+        # path)
+        if duration_s is None:
+            raise ValueError("times_array needs a finite duration_s")
+        out = []
+        on = self.start_on
+        seg_start = 0.0
+        while seg_start < duration_s:
+            dwell = float(np_rng.exponential(
+                self.mean_on_s if on else self.mean_off_s))
+            rate = self.rate_on if on else self.rate_off
+            span = min(seg_start + dwell, duration_s) - seg_start
+            if rate > 0.0 and span > 0.0:
+                seg = _poisson_times(rate, span, np_rng)
+                if len(seg):
+                    out.append(seg_start + seg)
+            seg_start += dwell
+            on = not on
+        if not out:
+            return np.empty(0, dtype=np.float64)
+        return out[0] if len(out) == 1 else np.concatenate(out)
+
     def mean_rate(self):
         tot = self.mean_on_s + self.mean_off_s
         return (self.rate_on * self.mean_on_s
@@ -147,6 +221,21 @@ class DiurnalArrivals(ArrivalProcess):
                 return
             if rng.random() * peak < self.rate_at(t):
                 yield t
+
+    def times_array(self, duration_s, np_rng):
+        # batch Lewis-Shedler thinning: one Poisson(peak) candidate
+        # batch, the sinusoidal envelope evaluated vectorized, one
+        # uniform accept batch
+        if duration_s is None:
+            raise ValueError("times_array needs a finite duration_s")
+        peak = self.base_rate * (1.0 + abs(self.amplitude))
+        cand = _poisson_times(peak, duration_s, np_rng)
+        if not len(cand):
+            return cand
+        rate = self.base_rate * (1.0 + self.amplitude * np.sin(
+            2.0 * np.pi * cand / self.period_s + self.phase))
+        keep = np_rng.random(len(cand)) * peak < rate
+        return cand[keep]
 
     def mean_rate(self):
         return self.base_rate
@@ -193,6 +282,28 @@ class TraceArrivals(ArrivalProcess):
                 # restore the cycle's idle tail (never move backwards if
                 # a caller passed a period shorter than the trace span)
                 t = max(t, start + self.period_s)
+
+    def times_array(self, duration_s, np_rng=None):
+        # verbatim replay consumes no RNG; looping tiles cycle offsets
+        # (cycle = max(trace span, period_s), matching the scalar
+        # idle-tail restoration). Absolute times come from per-cycle
+        # offset + cumsum rather than one running float sum, so the two
+        # paths can differ in the last ulp — covered by the bulk
+        # contract, not the scalar goldens.
+        base = np.cumsum(np.asarray(self.iats, dtype=np.float64))
+        if not self.loop or not len(base):
+            return base if duration_s is None else base[base < duration_s]
+        if duration_s is None:
+            raise ValueError("looped trace replay needs a finite "
+                             "duration_s")
+        cycle = (base[-1] if self.period_s is None
+                 else max(float(base[-1]), self.period_s))
+        if cycle <= 0.0:
+            raise ValueError("looped trace with zero span never advances")
+        reps = int(math.ceil(duration_s / cycle)) + 1
+        tiled = (np.arange(reps, dtype=np.float64)[:, None] * cycle
+                 + base[None, :]).ravel()
+        return tiled[tiled < duration_s]
 
     def mean_rate(self):
         total = (self.period_s if self.loop and self.period_s is not None

@@ -10,13 +10,25 @@ arrival times.
 Determinism contract: same seed => byte-identical ``Request`` stream
 (including ``rid``\\ s when ``rid_base`` is set, the default), and hence a
 byte-identical ``RequestResult`` stream out of a seeded ``Simulator``.
+
+The vectorized bulk path (:meth:`MixedWorkload.generate_bulk` →
+:class:`RequestBatch`) draws from numpy ``Generator`` streams instead
+and carries its *own* contract: same seed ⇒ byte-identical
+``RequestBatch`` (pinned by golden digests in tests/test_bulk.py),
+matching the scalar path in distribution but not byte-for-byte — the
+numpy stream cannot reproduce the Mersenne one. The scalar path above
+is untouched.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
+import math
 import random
 from dataclasses import dataclass, field
-from typing import Iterator, List, Optional, Sequence
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.types import Request
 from repro.workloads.arrivals import ArrivalProcess
@@ -58,12 +70,85 @@ class SizeDist:
         if self.dist == "uniform":
             return rng.randint(int(self.a), int(self.b))
         if self.dist == "lognormal":
-            import math
             return max(1, round(self.a * math.exp(
                 rng.gauss(0.0, self.b))))
         if self.dist == "choice":
             return rng.choices(self.values, weights=self.weights, k=1)[0]
         raise ValueError(f"unknown size distribution {self.dist!r}")
+
+    def sample_array(self, n: int, np_rng: np.random.Generator) -> np.ndarray:
+        """Vectorized counterpart of :meth:`sample`: ``n`` int64 draws
+        from a numpy ``Generator`` (the bulk path's own determinism
+        contract — same distribution as the scalar path, different
+        stream)."""
+        if self.dist == "const":
+            return np.full(n, int(self.a), dtype=np.int64)
+        if self.dist == "uniform":
+            return np_rng.integers(int(self.a), int(self.b) + 1, size=n,
+                                   dtype=np.int64)
+        if self.dist == "lognormal":
+            draws = self.a * np.exp(np_rng.normal(0.0, self.b, size=n))
+            return np.maximum(1, np.rint(draws)).astype(np.int64)
+        if self.dist == "choice":
+            w = np.asarray(self.weights, dtype=np.float64)
+            return np_rng.choice(np.asarray(self.values, dtype=np.int64),
+                                 size=n, p=w / w.sum())
+        raise ValueError(f"unknown size distribution {self.dist!r}")
+
+
+@dataclass
+class RequestBatch:
+    """Columnar (struct-of-arrays) request batch from
+    :meth:`MixedWorkload.generate_bulk` — the bulk-ingest counterpart of
+    a ``Request`` list, without the per-request object churn. Columns
+    are parallel arrays in ascending arrival order; ``fn_idx`` indexes
+    into ``fns``; a NaN ``deadline_t`` means "no deadline" (maps to
+    ``Request.deadline_t=None``)."""
+
+    fns: Tuple[str, ...]
+    arrival_t: np.ndarray              # float64, ascending
+    fn_idx: np.ndarray                 # int32 index into fns
+    size: np.ndarray                   # int64 prompt sizes
+    rid: np.ndarray                    # int64 request ids
+    deadline_t: np.ndarray             # float64; NaN => no deadline
+
+    def __len__(self) -> int:
+        return len(self.arrival_t)
+
+    def digest(self) -> str:
+        """sha256 over the raw column bytes (fixed dtypes/endianness):
+        the bulk determinism contract's byte-identity witness."""
+        h = hashlib.sha256(repr(self.fns).encode())
+        for col, dt in ((self.arrival_t, "<f8"), (self.fn_idx, "<i4"),
+                        (self.size, "<i8"), (self.rid, "<i8"),
+                        (self.deadline_t, "<f8")):
+            h.update(np.ascontiguousarray(col, dtype=dt).tobytes())
+        return h.hexdigest()[:16]
+
+    def slice(self, lo: int, hi: int) -> "RequestBatch":
+        return RequestBatch(self.fns, self.arrival_t[lo:hi],
+                            self.fn_idx[lo:hi], self.size[lo:hi],
+                            self.rid[lo:hi], self.deadline_t[lo:hi])
+
+    def iter_chunks(self, chunk: int) -> Iterator["RequestBatch"]:
+        """Views (no copies) of ``chunk`` consecutive requests each —
+        the streaming unit ``Simulator.load_bulk`` pushes per bulk run."""
+        for lo in range(0, len(self), chunk):
+            yield self.slice(lo, lo + chunk)
+
+    def to_requests(self) -> List[Request]:
+        """Materialize ``Request`` objects (the simulator's payload
+        type) in arrival order."""
+        fns = self.fns
+        out: List[Request] = []
+        ap = out.append
+        for t, fi, sz, rid, dl in zip(
+                self.arrival_t.tolist(), self.fn_idx.tolist(),
+                self.size.tolist(), self.rid.tolist(),
+                self.deadline_t.tolist()):
+            ap(Request(fn=fns[fi], arrival_t=t, size=sz, rid=rid,
+                       deadline_t=None if dl != dl else dl))  # NaN check
+        return out
 
 
 @dataclass(frozen=True)
@@ -138,6 +223,48 @@ class MixedWorkload:
 
     def generate(self) -> List[Request]:
         return list(self.requests())
+
+    def generate_bulk(self) -> RequestBatch:
+        """Vectorized counterpart of :meth:`generate`: the whole stream
+        as one columnar :class:`RequestBatch`, drawn from two numpy
+        ``Generator`` streams (arrivals vs. mix, spawned from one
+        ``SeedSequence`` so adding a function never perturbs arrival
+        times — same independence property as the scalar path). Own
+        determinism contract: same seed ⇒ byte-identical batch; the
+        scalar Mersenne stream is not reproduced, only its
+        distribution."""
+        if self.rid_base is None:
+            raise ValueError(
+                "generate_bulk needs a deterministic rid_base (the "
+                "process-global id counter cannot be assigned in bulk)")
+        arr_ss, mix_ss = np.random.SeedSequence(self.seed % 2**64).spawn(2)
+        times = self.arrivals.times_array(
+            self.duration_s, np.random.default_rng(arr_ss))
+        times = np.ascontiguousarray(times, dtype=np.float64)
+        mix_rng = np.random.default_rng(mix_ss)
+        n = len(times)
+        k = len(self.profiles)
+        if k == 1:
+            fn_idx = np.zeros(n, dtype=np.int32)
+            sizes = self.profiles[0].size.sample_array(n, mix_rng)
+        else:
+            w = np.asarray(self._weights, dtype=np.float64)
+            fn_idx = mix_rng.choice(k, size=n,
+                                    p=w / w.sum()).astype(np.int32)
+            sizes = np.empty(n, dtype=np.int64)
+            for i, p in enumerate(self.profiles):
+                mask = fn_idx == i
+                sizes[mask] = p.size.sample_array(int(mask.sum()), mix_rng)
+        deadlines = np.full(n, np.nan)
+        for i, p in enumerate(self.profiles):
+            if p.slo_p95_s is not None:
+                mask = fn_idx == i
+                deadlines[mask] = times[mask] + p.slo_p95_s
+        rid0 = self.rid_base
+        return RequestBatch(fns=tuple(p.fn for p in self.profiles),
+                            arrival_t=times, fn_idx=fn_idx, size=sizes,
+                            rid=np.arange(rid0, rid0 + n, dtype=np.int64),
+                            deadline_t=deadlines)
 
     def submit_to(self, sim) -> int:
         """Feed every request into a Simulator; returns the count."""

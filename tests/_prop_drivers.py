@@ -193,6 +193,84 @@ def run_event_backend_ops(seed: int, n_ops: int = 400) -> int:
     return n_ops
 
 
+def run_push_bulk_ops(seed: int, n_ops: int = 80) -> int:
+    """ISSUE-8 invariant: ``push_bulk``/``pop_batch`` on every backend
+    are order-identical to per-entry ``push``/``pop`` on the single-heap
+    reference, under arbitrary interleavings of scalar pushes, bulk runs
+    (sorted / shuffled / tied / numpy / list / with payloads, small
+    enough for the per-entry sealed path and large enough for the
+    vectorized one), horizon pops, and greedy batch pops. After every op
+    the engines agree on length and pending-real accounting; at the end
+    both drain to the same byte-identical stream. Returns ops checked."""
+    import numpy as np
+
+    from repro.core.events import EventEngine
+
+    rng = random.Random(seed)
+    nprng = np.random.default_rng(seed)
+    eng = EventEngine("sharded", background=("tick",))
+    ref = EventEngine("single_heap", background=("tick",))
+    t_hi = 0.0
+    # bulk-load prefix: whole-horizon sorted runs (the load_bulk shape),
+    # sealed by a pop burst so later runs hit the sealed insert paths
+    for _ in range(rng.randrange(0, 3)):
+        run = np.sort(nprng.uniform(0.0, 50.0, rng.randrange(0, 2000)))
+        eng.push_bulk(run, "arrival", None)
+        ref.push_bulk(run, "arrival", None)
+    for _ in range(rng.randrange(0, 60)):
+        a, b = eng.pop(), ref.pop()
+        assert a == b, (seed, "prefix", a, b)
+        if a is not None:
+            t_hi = max(t_hi, a[0])
+    for op in range(n_ops):
+        r = rng.random()
+        if r < 0.35:                                       # bulk run
+            m = rng.randrange(0, 200)
+            horizon = rng.choice([0.01, 0.5, 5.0, 40.0])
+            ts = t_hi + np.sort(nprng.uniform(0.0, horizon, m))
+            if rng.random() < 0.3:                         # unsorted jitter
+                ts = t_hi + nprng.uniform(0.0, horizon, m)
+            elif rng.random() < 0.3:                       # tie-heavy
+                ts = t_hi + np.repeat(
+                    nprng.uniform(0.0, horizon, max(m // 4, 1)), 4)[:m]
+            if rng.random() < 0.5:
+                ts = ts.tolist()
+            pl = None if rng.random() < 0.5 else [
+                f"p{op}-{i}" for i in range(m)]
+            kind = "tick" if rng.random() < 0.15 else "ev"
+            eng.push_bulk(ts, kind, pl)
+            ref.push_bulk(ts, kind, pl)
+        elif r < 0.5:                                      # scalar push
+            t = t_hi + rng.random() * 3.0
+            eng.push(t, "ev", op)
+            ref.push(t, "ev", op)
+        elif r < 0.7:                                      # single pop
+            until = None if rng.random() < 0.5 else t_hi + rng.random()
+            a, b = eng.pop(until), ref.pop(until)
+            assert a == b, (seed, op, a, b)
+            if a is not None:
+                t_hi = max(t_hi, a[0])
+        else:                        # pop_batch vs sequential ref pops
+            k = rng.randrange(1, 600)
+            until = None if rng.random() < 0.5 else t_hi + rng.random() * 2.0
+            batch = eng.pop_batch(k, until)
+            for e in batch:
+                assert e == ref.pop(until), (seed, op, e)
+            if len(batch) < k:       # greedy: ref must be blocked too
+                assert ref.pop(until) is None, (seed, op)
+            if batch:
+                t_hi = max(t_hi, batch[-1][0])
+        assert len(eng) == len(ref), (seed, op, len(eng), len(ref))
+        assert eng.pending_real == ref.pending_real, (seed, op)
+    while True:                                            # full drain
+        a, b = eng.pop(), ref.pop()
+        assert a == b, (seed, "drain", a, b)
+        if a is None:
+            break
+    assert len(eng) == 0 and eng.pending_real == 0
+    return n_ops
+
+
 def _random_workflow_spec(rng: random.Random):
     """A random declaration-order DAG: 2-7 stages, each depending on a
     random subset of earlier stages (so topology is valid by

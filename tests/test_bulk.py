@@ -1,0 +1,230 @@
+"""ISSUE-8 bulk generation fast path: the RequestBatch contracts.
+
+``MixedWorkload.generate_bulk`` draws from numpy ``Generator`` streams,
+so it cannot reproduce the scalar Mersenne stream byte for byte — it
+carries its *own* determinism contract instead, pinned here:
+
+- goldens: same seed ⇒ byte-identical ``RequestBatch`` (sha256 column
+  digests, one per arrival-process kind — these change only if the bulk
+  sampling algorithms change, which is a contract break to be made
+  deliberately);
+- distribution equivalence: bulk matches the scalar path on arrival
+  counts, mix shares, size-distribution means, and deadline mapping
+  (trace replay is verbatim, so there it matches *exactly*);
+- structure: ascending in-range arrivals, contiguous rids, NaN⇔None
+  deadline mapping through ``to_requests``, lossless chunk iteration.
+
+The scalar path's goldens live in test_workloads.py and are untouched.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.workloads import (ArrivalProcess, BurstyArrivals, DiurnalArrivals,
+                             FunctionProfile, MixedWorkload, PoissonArrivals,
+                             RequestBatch, SizeDist, TraceArrivals)
+
+PROFILES = [
+    FunctionProfile("interactive", weight=3.0,
+                    size=SizeDist.lognormal(24, 0.6), slo_p95_s=0.5),
+    FunctionProfile("batch", weight=1.0, size=SizeDist.uniform(64, 512)),
+    FunctionProfile("ping", weight=1.0, size=SizeDist.const(4)),
+]
+
+ARRIVAL_CASES = {
+    "poisson": PoissonArrivals(120.0),
+    "bursty": BurstyArrivals(rate_on=300.0, rate_off=40.0,
+                             mean_on_s=1.0, mean_off_s=3.0),
+    "diurnal": DiurnalArrivals(120.0, amplitude=0.8, period_s=60.0),
+    "trace": TraceArrivals([0.008] * 997, loop=True),
+}
+
+DUR = 60.0
+
+# same seed => byte-identical batch; changing these is a deliberate
+# break of the bulk determinism contract (record it in CHANGES.md)
+GOLDEN_DIGESTS = {
+    "poisson": "910cc244c7b3ee1a",
+    "bursty": "88a4a79b67e6bd68",
+    "diurnal": "7c4490d74cf6a874",
+    "trace": "5cd86db882492a20",
+}
+
+
+def _wl(kind, seed=11, profiles=PROFILES):
+    return MixedWorkload(ARRIVAL_CASES[kind], profiles,
+                         duration_s=DUR, seed=seed)
+
+
+# ------------------------------------------------------------------ goldens
+@pytest.mark.parametrize("kind", sorted(ARRIVAL_CASES))
+def test_generate_bulk_matches_golden_digest(kind):
+    assert _wl(kind).generate_bulk().digest() == GOLDEN_DIGESTS[kind]
+
+
+@pytest.mark.parametrize("kind", sorted(ARRIVAL_CASES))
+def test_generate_bulk_run_twice_byte_identical(kind):
+    a, b = _wl(kind).generate_bulk(), _wl(kind).generate_bulk()
+    assert a.digest() == b.digest()
+    for col in ("arrival_t", "fn_idx", "size", "rid", "deadline_t"):
+        np.testing.assert_array_equal(getattr(a, col), getattr(b, col))
+    assert _wl(kind, seed=12).generate_bulk().digest() != a.digest()
+
+
+# ---------------------------------------------------------------- structure
+@pytest.mark.parametrize("kind", sorted(ARRIVAL_CASES))
+def test_generate_bulk_batch_structure(kind):
+    batch = _wl(kind).generate_bulk()
+    t = batch.arrival_t
+    assert len(batch) == len(t) > 0
+    assert np.all(t[:-1] <= t[1:])
+    assert t[0] >= 0.0 and t[-1] < DUR
+    np.testing.assert_array_equal(
+        batch.rid, np.arange(len(batch), dtype=np.int64))
+    assert batch.fns == ("interactive", "batch", "ping")
+    assert batch.fn_idx.min() >= 0 and batch.fn_idx.max() <= 2
+    # deadlines: slo-bearing fns get arrival + slo, others NaN
+    has_slo = batch.fn_idx == 0
+    np.testing.assert_allclose(batch.deadline_t[has_slo], t[has_slo] + 0.5)
+    assert np.isnan(batch.deadline_t[~has_slo]).all()
+
+
+def test_generate_bulk_rid_base_offsets_and_none_raises():
+    wl = MixedWorkload(PoissonArrivals(50.0), PROFILES, duration_s=10.0,
+                       seed=3, rid_base=1000)
+    batch = wl.generate_bulk()
+    assert batch.rid[0] == 1000
+    np.testing.assert_array_equal(
+        batch.rid, np.arange(1000, 1000 + len(batch)))
+    wl_none = MixedWorkload(PoissonArrivals(50.0), PROFILES, duration_s=10.0,
+                            seed=3, rid_base=None)
+    with pytest.raises(ValueError):
+        wl_none.generate_bulk()
+
+
+def test_to_requests_round_trips_columns():
+    batch = _wl("poisson").generate_bulk()
+    reqs = batch.to_requests()
+    assert len(reqs) == len(batch)
+    for i in (0, len(reqs) // 2, -1):
+        r = reqs[i]
+        assert r.fn == batch.fns[batch.fn_idx[i]]
+        assert r.arrival_t == batch.arrival_t[i]
+        assert r.size == batch.size[i]
+        assert r.rid == batch.rid[i]
+        dl = batch.deadline_t[i]
+        assert r.deadline_t == (None if math.isnan(dl) else dl)
+    # NaN deadline really maps to None somewhere in the stream
+    assert any(r.deadline_t is None for r in reqs)
+    assert any(r.deadline_t is not None for r in reqs)
+
+
+def test_iter_chunks_covers_batch_losslessly():
+    batch = _wl("poisson").generate_bulk()
+    chunks = list(batch.iter_chunks(257))
+    assert sum(len(c) for c in chunks) == len(batch)
+    assert all(len(c) <= 257 for c in chunks)
+    np.testing.assert_array_equal(
+        np.concatenate([c.arrival_t for c in chunks]), batch.arrival_t)
+    np.testing.assert_array_equal(
+        np.concatenate([c.rid for c in chunks]), batch.rid)
+    # chunk boundaries preserve request identity end to end
+    tail = chunks[-1].to_requests()[-1]
+    assert tail.rid == batch.rid[-1]
+
+
+def test_base_times_array_raises_with_guidance():
+    with pytest.raises(NotImplementedError):
+        ArrivalProcess().times_array(1.0, np.random.default_rng(0))
+
+
+# --------------------------------------------------- scalar <-> bulk shape
+@pytest.mark.parametrize("kind", sorted(ARRIVAL_CASES))
+def test_bulk_matches_scalar_distribution(kind):
+    """The bulk path must match the scalar path *in distribution*: same
+    arrival volume (looser for bursty: dwell realizations differ between
+    the two RNG streams), same mix shares, same size means, same
+    deadline mapping. Trace replay consumes no RNG, so counts match
+    exactly there."""
+    wl = _wl(kind)
+    scalar = list(wl.requests())
+    batch = wl.generate_bulk()
+    n_s, n_b = len(scalar), len(batch)
+    if kind == "trace":
+        assert n_b == n_s
+        np.testing.assert_allclose(
+            batch.arrival_t, [r.arrival_t for r in scalar], atol=1e-9)
+    else:
+        tol = 0.35 if kind == "bursty" else 0.10
+        assert abs(n_b - n_s) <= tol * n_s, (kind, n_s, n_b)
+    # mix shares within 5 points of the declared weights
+    w = np.asarray([p.weight for p in PROFILES])
+    want = w / w.sum()
+    got = np.bincount(batch.fn_idx, minlength=3) / n_b
+    assert np.abs(got - want).max() < 0.05, (kind, got)
+    # per-fn size means within 15% of the scalar sample's
+    for i, p in enumerate(PROFILES):
+        bulk_sizes = batch.size[batch.fn_idx == i]
+        scal_sizes = [r.size for r in scalar if r.fn == p.fn]
+        assert len(bulk_sizes) and len(scal_sizes)
+        mb, ms = float(np.mean(bulk_sizes)), float(np.mean(scal_sizes))
+        assert abs(mb - ms) <= 0.15 * ms, (kind, p.fn, mb, ms)
+
+
+def test_poisson_bulk_iat_mean_matches_rate():
+    t = PoissonArrivals(200.0).times_array(50.0, np.random.default_rng(5))
+    iats = np.diff(t)
+    assert abs(float(iats.mean()) - 1.0 / 200.0) < 0.10 * (1.0 / 200.0)
+
+
+def test_trace_times_array_replays_verbatim_and_tiles():
+    import random
+    tr = TraceArrivals([0.5, 0.25, 0.25])
+    # non-loop: verbatim cumsum, horizon-filtered
+    np.testing.assert_allclose(tr.times_array(None), [0.5, 0.75, 1.0])
+    np.testing.assert_allclose(tr.times_array(0.8), [0.5, 0.75])
+    # loop + period: idle tail restored, exactly like the scalar path
+    lp = TraceArrivals([0.5, 0.25, 0.25], loop=True, period_s=2.0)
+    scalar = list(lp.times(7.0, random.Random(0)))
+    np.testing.assert_allclose(lp.times_array(7.0), scalar, atol=1e-9)
+    with pytest.raises(ValueError):
+        lp.times_array(None)
+    with pytest.raises(ValueError):
+        TraceArrivals([0.0], loop=True).times_array(5.0)
+
+
+# ------------------------------------------------------------ size sampling
+def test_sample_array_matches_scalar_distributions():
+    rng = np.random.default_rng(9)
+    assert (SizeDist.const(16).sample_array(50, rng) == 16).all()
+    u = SizeDist.uniform(8, 64).sample_array(2000, rng)
+    assert u.min() >= 8 and u.max() <= 64
+    assert {8, 64} <= set(u.tolist())      # bounds inclusive, like randint
+    ln = SizeDist.lognormal(24, 0.6).sample_array(4000, rng)
+    assert ln.min() >= 1
+    assert abs(float(np.median(ln)) - 24) <= 4
+    ch = SizeDist.choice([4, 8, 32], weights=[1, 1, 6]).sample_array(
+        2000, rng)
+    assert set(ch.tolist()) == {4, 8, 32}
+    assert (ch == 32).mean() > 0.6
+    with pytest.raises(ValueError):
+        SizeDist("nope").sample_array(3, rng)
+
+
+def test_request_batch_digest_covers_every_column():
+    base = _wl("poisson").generate_bulk()
+
+    def mutated(**over):
+        cols = dict(fns=base.fns, arrival_t=base.arrival_t,
+                    fn_idx=base.fn_idx, size=base.size, rid=base.rid,
+                    deadline_t=base.deadline_t)
+        cols.update(over)
+        return RequestBatch(**cols)
+
+    assert mutated().digest() == base.digest()
+    assert mutated(fns=("a", "b", "c")).digest() != base.digest()
+    for col in ("arrival_t", "fn_idx", "size", "rid", "deadline_t"):
+        arr = getattr(base, col).copy()
+        arr[0] = -1                        # NaN-proof: NaN + 1 == NaN
+        assert mutated(**{col: arr}).digest() != base.digest(), col

@@ -61,6 +61,58 @@ def test_engine_pop_until_leaves_event_in_place():
     assert eng.pop(until=5.0) == (5.0, 0, "ev", "late")
 
 
+# --------------------------------------------------- bulk ingest (ISSUE-8)
+def test_push_bulk_matches_per_push_scalar_reference():
+    """One deterministic spot check (the property driver fuzzes the rest):
+    a sealed sharded queue takes a bulk run spanning the draining bucket
+    and several future buckets, and drains identically to single_heap."""
+    eng = EventEngine("sharded")
+    ref = EventEngine("single_heap")
+    pre = [i * 0.1 for i in range(200)]    # stage + seal via first pops
+    eng.push_bulk(pre, "arrival", None)
+    ref.push_bulk(pre, "arrival", None)
+    for _ in range(50):
+        assert eng.pop() == ref.pop()
+    run = [4.90001 + i * 0.07 for i in range(100)]   # big: vectorized path
+    eng.push_bulk(run, "fu", list(range(100)))
+    ref.push_bulk(run, "fu", list(range(100)))
+    eng.push_bulk([5.0001, 5.0002], "fu", None)      # small: per-entry path
+    ref.push_bulk([5.0001, 5.0002], "fu", None)
+    out = [eng.pop() for _ in range(len(eng))]
+    assert out == [ref.pop() for _ in range(len(ref))]
+    assert out == sorted(out)
+    assert eng.pop() is None and ref.pop() is None
+
+
+def test_pop_batch_is_greedy_and_horizon_bounded():
+    for backend in ("single_heap", "sharded"):
+        eng = EventEngine(backend)
+        eng.push_bulk([float(i) for i in range(10)], "ev", None)
+        assert [e[0] for e in eng.pop_batch(3)] == [0.0, 1.0, 2.0]
+        # horizon cuts inside the batch; until is inclusive
+        assert [e[0] for e in eng.pop_batch(100, until=5.0)] == [3.0, 4.0,
+                                                                 5.0]
+        assert eng.pop_batch(100, until=5.5) == []
+        assert [e[0] for e in eng.pop_batch(100)] == [6.0, 7.0, 8.0, 9.0]
+        assert eng.pop_batch(4) == [] and len(eng) == 0
+
+
+def test_push_bulk_stamps_contiguous_seqs_and_counts_background():
+    eng = EventEngine("single_heap", background=("tick",))
+    assert eng.push_bulk([1.0, 2.0], "ev", None) == 2
+    assert eng.push_bulk([1.5], "tick", None) == 1
+    assert eng.push_bulk([], "ev", None) == 0
+    assert len(eng) == 3 and eng.pending_real == 2
+    assert [e[1] for e in eng.pop_batch(3)] == [0, 2, 1]  # seq stamp order
+    assert eng.pending_real == 0
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_push_bulk_matches_per_push_across_backends(seed):
+    from _prop_drivers import run_push_bulk_ops
+    assert run_push_bulk_ops(seed) > 0
+
+
 # ------------------------------------------------------- sharded internals
 def test_sharded_seals_bulk_load_then_takes_dynamic_pushes():
     q = ShardedQueue(target_per_bucket=4)
@@ -179,6 +231,56 @@ def test_sharded_byte_identical_through_autoscaled_control_loop():
     (a, sa), (b, sb) = run("single_heap"), run("sharded")
     assert _digest(a) == _digest(b)
     assert sa.decision_log() == sb.decision_log()
+
+
+# ------------------------------------------------- bulk-ingest equivalence
+def _bulk_sim(backend):
+    from repro.core.types import FunctionConfig
+    store = ConfigStore()
+    for fn in ("a", "b"):
+        store.put(FunctionConfig(name=fn, arch="tiny_lm", concurrency=4,
+                                 cold_start_s=0.05))
+    return Simulator(build_tree(4, fanout=2), store,
+                     SyntheticServiceModel(seed=2), seed=7,
+                     event_backend=backend)
+
+
+def _bulk_workload():
+    from repro.workloads import (FunctionProfile, MixedWorkload,
+                                 PoissonArrivals, SizeDist)
+    return MixedWorkload(
+        PoissonArrivals(150.0),
+        [FunctionProfile("a", weight=2.0, size=SizeDist.lognormal(24, 0.5),
+                         slo_p95_s=0.8),
+         FunctionProfile("b", size=SizeDist.uniform(8, 64))],
+        duration_s=8.0, seed=5)
+
+
+@pytest.mark.parametrize("backend", ["single_heap", "sharded"])
+def test_load_bulk_byte_identical_to_per_request_submit(backend):
+    """sim.load_bulk(wl) must be byte-identical (results + telemetry) to
+    submitting the same RequestBatch request by request — including with
+    a chunk size that forces many bulk runs per load."""
+    wl = _bulk_workload()
+    a = _bulk_sim(backend)
+    for req in wl.generate_bulk().to_requests():
+        a.submit(req)
+    a.run()
+    b = _bulk_sim(backend)
+    assert b.load_bulk(wl, chunk=257) == len(a.results)
+    b.run()
+    assert _digest(a) == _digest(b)
+
+
+def test_load_bulk_byte_identical_across_backends():
+    a = _bulk_sim("single_heap")
+    a.load_bulk(_bulk_workload())
+    a.run()
+    b = _bulk_sim("sharded")
+    b.load_bulk(_bulk_workload())
+    b.run()
+    assert _digest(a) == _digest(b)
+    assert a.events_processed == b.events_processed
 
 
 # ------------------------------------------------------ resume equivalence

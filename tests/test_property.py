@@ -243,6 +243,17 @@ def test_event_backends_drain_in_identical_order(seed):
 
 
 @given(st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_push_bulk_pop_batch_match_per_entry_reference(seed):
+    """ISSUE-8 bulk ingest: push_bulk/pop_batch on every backend are
+    order-identical to per-entry push/pop on the single-heap reference
+    under arbitrary interleavings (sorted/shuffled/tied runs, numpy or
+    list, payloads or not, horizon pops, greedy batch pops)."""
+    from _prop_drivers import run_push_bulk_ops
+    assert run_push_bulk_ops(seed) > 0
+
+
+@given(st.integers(0, 2**31 - 1))
 @settings(max_examples=15, deadline=None)
 def test_workflow_dag_execution(seed):
     """ISSUE-7 workflow invariants on random DAGs: active stages run
