@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_workload_scenarios named traffic shapes + >=1M-request bursty probe
   bench_autoscaler_scenarios autoscaler policy menu vs static replicate
   bench_fault_scenarios    chaos layer: zone outage A/B + retry storm
+  bench_gateway            front-door gateway: noisy-neighbor flood A/B
   bench_workflows          DAG workflows: stage-blind vs DAG-aware routing
   bench_sim_throughput     simulator events/s (testbed capacity)
   roofline_table           dry-run artifacts summary (if sweep has run)
@@ -471,6 +472,75 @@ def bench_fault_scenarios():
          f"cap=32;sim_wall_s={wall:.1f}")
 
 
+def bench_gateway():
+    """ISSUE-9 acceptance probe: the `noisy_neighbor` A/B (gateway on
+    vs off, same fleet — equal worker-seconds). Two rigs, the same ones
+    tests/test_gateway.py enforces:
+
+    `noisy` — the flood is capped at one replica per worker, so the
+    baseline queues it to the 8 s timeout horizon and ~14k hedge clones
+    double its service demand; the gateway's batch admission ceiling
+    keeps its outstanding work at 6, nothing hedges, and the same fleet
+    clears ~1.65x the goodput.
+
+    `pinned` — a roomier fleet with no replica cap: the flood wins
+    every memory slot at t=0 and pins `embed` at *zero* completions;
+    the admission ceiling bounds the flood's footprint and both
+    interactive tenants come back within SLO."""
+    from repro.autoscale import build_pool
+    from repro.core.config_store import ConfigStore
+    from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                      summarize)
+    from repro.core.types import FunctionConfig
+    from repro.workloads import build_scenario
+
+    CONC = {"chat": 4, "embed": 2, "flood": 2}
+    SLO = {"chat": 0.5, "embed": 1.0, "flood": 5.0}
+
+    def _sim(*, gateway, mem, flood_maxi, batch_limit):
+        gw_kw = (dict(flood_rate=400.0, flood_burst=8.0,
+                      max_inflight=4 * batch_limit, batch_share=0.25)
+                 if gateway else {})
+        wl = build_scenario("noisy_neighbor", gateway=gateway, seed=3,
+                            duration_s=12.0, **gw_kw)
+        store = ConfigStore()
+        for p in wl.profiles:
+            store.put(FunctionConfig(
+                name=p.fn, arch="tiny_lm", concurrency=CONC[p.fn],
+                cold_start_s=0.2, timeout_s=8.0,
+                idle_timeout_s=1.0 if p.fn == "flood" else 10.0,
+                max_instances_per_worker=(flood_maxi if p.fn == "flood"
+                                          else 8)))
+        sim = Simulator(build_pool(1, 2, leaf_policy="warm_least_loaded",
+                                   inner_policy="round_robin"),
+                        store, SyntheticServiceModel(seed=2, fail_rate=0.0),
+                        seed=11, hedge_after_s=0.6, worker_memory_mb=mem)
+        sim.load(wl)
+        return sim
+
+    rigs = {"noisy": dict(mem=1536, flood_maxi=1, batch_limit=6),
+            "pinned": dict(mem=2048, flood_maxi=8, batch_limit=5)}
+    for rig, kw in rigs.items():
+        for gateway in (False, True):
+            sim = _sim(gateway=gateway, **kw)
+            t0 = time.perf_counter()
+            results = sim.run()
+            wall = time.perf_counter() - t0
+            s = summarize(results)
+            parts = []
+            for fn, slo in sorted(SLO.items()):
+                lat = sorted(r.latency for r in results
+                             if r.fn == fn and r.ok)
+                p95 = lat[int(0.95 * len(lat))] if lat else float("nan")
+                parts.append(f"{fn}={p95 * 1e3:.0f}ms")
+            shed = sim.gateway.shed_total if sim.gateway is not None else 0
+            _row(f"gateway_{rig}_{'on' if gateway else 'off'}",
+                 1e6 * s["p95"],
+                 f"goodput={s['goodput']:.1f};ok={s['ok']};"
+                 f"p95={','.join(parts)};hedges={sim.hedges_seen};"
+                 f"shed={shed};sim_wall_s={wall:.1f}")
+
+
 def bench_workflows():
     """ISSUE-7 acceptance probe: DAG workflows (`ml_pipeline` chain +
     conditional branch, `etl_fanout` map-reduce) routed stage-blind
@@ -778,7 +848,8 @@ BENCHES = [bench_tree_scaling, bench_lb_policies, bench_concurrency,
            bench_emulation, bench_serving_engine, bench_kernels,
            bench_workload_scenarios, bench_workload_generation,
            bench_autoscaler_scenarios, bench_placement,
-           bench_fault_scenarios, bench_workflows, bench_event_backends,
+           bench_fault_scenarios, bench_gateway, bench_workflows,
+           bench_event_backends,
            bench_sim_throughput, roofline_table]
 
 

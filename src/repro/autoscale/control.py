@@ -43,6 +43,7 @@ class ControlPlane:
         self.autoscaler = None
         self.placement_records: List[str] = []   # start/reap/idle events
         self.routing_records: List[str] = []     # arrival/reroute choices
+        self.gateway_records: List[str] = []     # front-door verdicts
 
     # ------------------------------------------------------- decision logs
     def log_placement(self, kind: str, w, fn: str) -> None:
@@ -61,10 +62,21 @@ class ControlPlane:
         one line per replica start/reap/idle-stop, in event order."""
         return "\n".join(self.placement_records)
 
+    def log_gateway(self, kind: str, req, verdict) -> None:
+        self.gateway_records.append(
+            f"t={self.sim.now:.6f} {kind} rid={req.rid} fn={req.fn} "
+            f"verdict={verdict or 'admit'}")
+
     def routing_log(self) -> str:
         """Byte-stable routing decision log (``record_decisions=True``):
         one line per arrival/reroute with the worker the tree chose."""
         return "\n".join(self.routing_records)
+
+    def gateway_log(self) -> str:
+        """Byte-stable front-door decision log (``record_decisions=True``):
+        one line per gateway consult (arrival or retry) with the
+        verdict — ``admit`` or the terminal shed error."""
+        return "\n".join(self.gateway_records)
 
     # -------------------------------------------------- per-fn scale units
     def prewarm(self, worker: str, fn: str) -> bool:

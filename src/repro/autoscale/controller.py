@@ -119,6 +119,8 @@ class Autoscaler:
         self._last_results = 0
         self._last_cold = 0
         self._last_fn_arrivals: Dict[str, int] = {}
+        self._last_fn_admitted: Dict[str, int] = {}
+        self._last_fn_shed: Dict[str, int] = {}
         self._lat_est = LatencyEstimator()
         # rate-based policies need the tick period to convert deltas
         if hasattr(self.policy, "interval_s"):
@@ -130,10 +132,13 @@ class Autoscaler:
         the latency estimator from the results delta — O(workers x fns +
         new results) per tick."""
         new_completions: Dict[str, int] = {}
+        new_ok: Dict[str, int] = {}
         for r in sim.results[self._last_results:]:
             new_completions[r.fn] = new_completions.get(r.fn, 0) + 1
             if r.ok:
+                new_ok[r.fn] = new_ok.get(r.fn, 0) + 1
                 self._lat_est.observe(r.fn, r.latency)
+        gw = getattr(sim, "gateway", None)
         rows = []
         for fn in sorted(sim.arrivals_by_fn):
             queue = inflight = warm = 0
@@ -144,12 +149,25 @@ class Autoscaler:
                     inflight += rs.inflight()
                     warm += len(rs)
             arr = sim.arrivals_by_fn[fn]
+            shed = 0
+            if gw is not None:
+                # post-gateway demand: rate policies should track what
+                # the front door admitted, not the offered flood it shed
+                adm = gw.admitted_by_fn.get(fn, 0)
+                arr = adm - self._last_fn_admitted.get(fn, 0)
+                self._last_fn_admitted[fn] = adm
+                sh = gw.shed_by_fn.get(fn, 0)
+                shed = sh - self._last_fn_shed.get(fn, 0)
+                self._last_fn_shed[fn] = sh
+            else:
+                arr = arr - self._last_fn_arrivals.get(fn, 0)
+                self._last_fn_arrivals[fn] = sim.arrivals_by_fn[fn]
             rows.append(FnSample(
                 fn=fn, queue=queue, inflight=inflight,
-                arrivals=arr - self._last_fn_arrivals.get(fn, 0),
+                arrivals=arr,
                 completions=new_completions.get(fn, 0), warm=warm,
-                p95_est=self._lat_est.p95(fn)))
-            self._last_fn_arrivals[fn] = arr
+                p95_est=self._lat_est.p95(fn), shed=shed,
+                goodput=new_ok.get(fn, 0)))
         return tuple(rows)
 
     def _snapshot(self, sim) -> MetricsSample:

@@ -23,7 +23,17 @@ from typing import Deque, Optional, Tuple
 
 @dataclass(frozen=True)
 class FnSample:
-    """One function's share of a control-loop observation."""
+    """One function's share of a control-loop observation.
+
+    With a front-door gateway attached (``sim.gateway``), ``arrivals``
+    is the *post-gateway admitted* delta — the demand that actually
+    reached the LB tree — so rate-proportional policies (reactive,
+    predictive, slo_aware) scale to the load the platform accepted, not
+    to a flood the gateway already refused. ``shed`` carries the refused
+    delta and ``goodput`` the successful-completion delta; without a
+    gateway, ``arrivals`` is offered load (unchanged semantics) and
+    ``shed`` stays 0.
+    """
 
     fn: str
     queue: int                 # queued requests for this fn across workers
@@ -32,6 +42,8 @@ class FnSample:
     completions: int           # fn results recorded since the previous tick
     warm: int                  # replicas (ready + warming) across workers
     p95_est: float             # windowed p95 latency estimate (0 => no data)
+    shed: int = 0              # gateway refusals since the previous tick
+    goodput: int = 0           # ok results recorded since the previous tick
 
     @property
     def concurrency(self) -> int:

@@ -24,6 +24,7 @@ from typing import List, Sequence
 
 from repro.autoscale.controller import Autoscaler
 from repro.autoscale.policy import AutoscalePolicy
+from repro.core.gateway import Gateway, GatewayConfig
 
 
 class ReplayPolicy(AutoscalePolicy):
@@ -64,6 +65,39 @@ def replay(records: Sequence[dict], **autoscaler_kwargs) -> Autoscaler:
     simulator with ``sim.attach_autoscaler(...)`` as usual.
     """
     return Autoscaler(ReplayPolicy(records), **autoscaler_kwargs)
+
+
+class ReplayGateway(Gateway):
+    """Re-emits a recorded front-door verdict sequence
+    (``Gateway.decision_records()``) instead of deciding.
+
+    Only :meth:`Gateway.decide` is overridden, so the slot accounting,
+    per-tenant counters, and release bookkeeping run exactly as live —
+    the replayed run's result stream is byte-identical to the recording
+    run's on the same seed/workload (consult order is deterministic).
+    Past the end of the recording it admits everything. Records are the
+    same plain-JSON shape ``save_decision_log``/``load_decision_log``
+    round-trip.
+    """
+
+    def __init__(self, records: Sequence[dict], config=None, *,
+                 record: bool = False):
+        super().__init__(config or GatewayConfig(), record=record)
+        self._replay: List[tuple] = [(r["rid"], r["verdict"])
+                                     for r in records]
+        self._ri = 0
+
+    def decide(self, req, now, *, retry):
+        if self._ri >= len(self._replay):
+            return None
+        rid, verdict = self._replay[self._ri]
+        if rid != req.rid:
+            raise ValueError(
+                f"gateway replay diverged: consult #{self._ri} saw "
+                f"rid={req.rid}, recording has rid={rid} (replaying "
+                "against a different workload/seed?)")
+        self._ri += 1
+        return None if verdict == "admit" else verdict
 
 
 def save_decision_log(records: Sequence[dict], path: str) -> None:

@@ -131,7 +131,8 @@ class Simulator:
                  retry_backoff_s: float = 0.05,
                  retry_backoff_cap_s: float = 1.0,
                  retry_storm_cap: int = 512,
-                 faults=None):
+                 faults=None,
+                 gateway=None):
         self.tree = tree
         self.store = store
         self.model = service_model
@@ -217,6 +218,7 @@ class Simulator:
         self._retries_pending = 0
         self.retries_scheduled = 0
         self.retries_shed = 0
+        self.retries_dropped = 0   # backoff expired after a hedge settled
         # workflow layer: None until a WorkflowWorkload (or a direct
         # attach_workflows call) binds a WorkflowEngine
         self.workflows = None
@@ -226,6 +228,13 @@ class Simulator:
         self.faults = None
         if faults is not None:
             self.attach_faults(faults)
+        # front-door gateway: None until a GatewayConfig/Gateway is
+        # attached (directly or via a workload's .gateway) — gateway-off
+        # runs consume no extra RNG and stay byte-identical to the
+        # pre-gateway goldens
+        self.gateway = None
+        if gateway is not None:
+            self.attach_gateway(gateway)
 
     # --------------------------------------------------- control-plane API
     # Thin delegates: the logic lives on repro.autoscale.control.ControlPlane
@@ -294,6 +303,30 @@ class Simulator:
 
     def fault_log(self) -> str:
         return "" if self.faults is None else self.faults.fault_log()
+
+    def attach_gateway(self, gateway):
+        """Attach the front-door stage (``repro.core.gateway``): accepts
+        a ``GatewayConfig`` or a prebuilt ``Gateway``. A disabled config
+        attaches nothing — the run stays byte-identical to a
+        gateway-free one. Verdict recording follows the simulator's
+        ``record_decisions`` flag so recorded runs are replayable
+        (``repro.autoscale.replay.ReplayGateway``)."""
+        from repro.core.gateway import Gateway, GatewayConfig
+        if isinstance(gateway, GatewayConfig):
+            if not gateway.enabled:
+                return None
+            gateway = Gateway(gateway)
+        if self._record:
+            gateway.record = True
+        self.gateway = gateway
+        return gateway
+
+    def gateway_log(self) -> str:
+        return self.control.gateway_log()
+
+    @property
+    def gateway_records(self) -> List[str]:
+        return self.control.gateway_records
 
     def attach_workflows(self, engine):
         """Bind the workflow DAG runtime (``repro.workloads.workflows``).
@@ -368,12 +401,14 @@ class Simulator:
         ``_resolve_node_state``; inner-node rows likewise)."""
         self._leaf_members = {}
         self._leaf_of = {}
+        self._leaf_nodes = {}
         self._node_workers = {}
         ancestors: Dict[str, set] = {}
 
         def walk(node, path):
             if node.is_leaf:
                 self._leaf_members[node.name] = list(node.workers)
+                self._leaf_nodes[node.name] = node
                 for w in node.workers:
                     self._leaf_of[w] = node.name
                     ancestors.setdefault(w, set()).update(path)
@@ -578,6 +613,9 @@ class Simulator:
         faults = getattr(workload, "faults", None)
         if faults is not None and self.faults is None:
             self.attach_faults(faults)
+        gateway = getattr(workload, "gateway", None)
+        if gateway is not None and self.gateway is None:
+            self.attach_gateway(gateway)
         return workload.submit_to(self)
 
     def load_bulk(self, workload, *, chunk: int = 1 << 18) -> int:
@@ -594,6 +632,9 @@ class Simulator:
         faults = getattr(workload, "faults", None)
         if faults is not None and self.faults is None:
             self.attach_faults(faults)
+        gateway = getattr(workload, "gateway", None)
+        if gateway is not None and self.gateway is None:
+            self.attach_gateway(gateway)
         batch = (workload if isinstance(workload, RequestBatch)
                  else workload.generate_bulk())
         push_bulk = self.engine.push_bulk
@@ -635,6 +676,16 @@ class Simulator:
             self.arrivals_seen += 1
             self.arrivals_by_fn[req.fn] = self.arrivals_by_fn.get(req.fn,
                                                                   0) + 1
+            # front door: every offered arrival traverses the gateway
+            # before the LB tree; a shed is a terminal answer (not
+            # retryable) recorded before any routing/telemetry happens
+            if self.gateway is not None:
+                verdict = self.gateway.admit(req, self.now)
+                if self._record:
+                    self.control.log_gateway("arrival", req, verdict)
+                if verdict is not None:
+                    self._record_fail(req, verdict)
+                    return
         else:
             # hedge clones are the platform's own speculation, not
             # offered load: counting them as arrivals fed the autoscaler
@@ -652,12 +703,12 @@ class Simulator:
             # where a cold start is memory-blocked
             self.view.fn_memory[req.fn] = self.store.get(req.fn).memory_mb
         wid, hops = self.tree.route(req, self.view, self.rng, self.now)
-        if not self.workers[wid].healthy:          # stale routing: re-roll
-            healthy = [w for w in self._worker_list
-                       if self.workers[w].healthy]
-            wid = self.rng.choice(healthy)
+        rerolled = not self.workers[wid].healthy   # stale routing
+        if rerolled:
+            wid = self._reroute_healthy(req, wid)
         if self._record:
-            self.control.log_routing("arrival", req, wid)
+            self.control.log_routing("arrival_reroll" if rerolled
+                                     else "arrival", req, wid)
         w = self.workers[wid]
         cfg = self.store.get(req.fn)
         if self.collect_telemetry:
@@ -685,20 +736,47 @@ class Simulator:
         self._retries_pending -= 1
         primary = req.hedged_from if req.hedged_from is not None else req.rid
         if primary in self._finished:
+            self.retries_dropped += 1
             return
+        # the front door is consulted on retries too: re-offering a
+        # request into a saturated platform is exactly the storm shape
+        # admission control exists to refuse
+        if self.gateway is not None:
+            verdict = self.gateway.admit(req, self.now, retry=True)
+            if self._record:
+                self.control.log_gateway("retry", req, verdict)
+            if verdict is not None:
+                self._record_fail(req, verdict)
+                return
         self._route_displaced(req, "retry")
+
+    def _reroute_healthy(self, req: Request, wid: str) -> str:
+        """The routed worker turned unhealthy between state publication
+        and this hop: re-score the healthy fleet with the *leaf policy*
+        that produced the stale pick. The old uniform
+        ``rng.choice(healthy)`` re-roll bypassed placement/deadline
+        scoring entirely (a deadline_aware tree degraded to random
+        exactly when capacity was scarcest). Fault-free runs never take
+        this path, so their goldens are untouched."""
+        healthy = [w for w in self._worker_list if self.workers[w].healthy]
+        leaf = self._leaf_nodes.get(self._leaf_of.get(wid, ""))
+        if leaf is None:                 # no owning leaf (defensive)
+            return self.rng.choice(healthy)
+        return leaf._policy(req, healthy, self.view, self.rng, self.now)
 
     def _route_displaced(self, req: Request, kind: str):
         if self._healthy_count == 0:
             self._record_fail(req, "no healthy workers")
             return
         wid, hops = self.tree.route(req, self.view, self.rng, self.now)
-        if not self.workers[wid].healthy:          # stale routing: re-roll
-            healthy = [w for w in self._worker_list
-                       if self.workers[w].healthy]
-            wid = self.rng.choice(healthy)
+        rerolled = not self.workers[wid].healthy   # stale routing
+        if rerolled:
+            wid = self._reroute_healthy(req, wid)
         if self._record:
-            self.control.log_routing(kind, req, wid)
+            # the _reroll suffix records the hop itself, so a decision-log
+            # replay/audit can see the displaced pick was policy-scored
+            self.control.log_routing(f"{kind}_reroll" if rerolled else kind,
+                                     req, wid)
         req._worker = wid
         self._push(self.now + self.hop_s * hops, "enqueue", req)
 
@@ -714,6 +792,7 @@ class Simulator:
         clone = Request(fn=req.fn, arrival_t=self.now, payload=req.payload,
                         size=req.size, rid=-req.rid - 1,
                         hedged_from=req.rid, deadline_t=req.deadline_t,
+                        priority=req.priority,
                         wf=req.wf, stage=req.stage, wf_task=req.wf_task,
                         wf_critical=req.wf_critical,
                         wf_affinity=req.wf_affinity)
@@ -814,6 +893,11 @@ class Simulator:
             self._resolve_telemetry(req, ok)
             return False
         self._finished.add(primary)
+        if self.gateway is not None:
+            # the slot was taken at the primary's admit; a winning clone
+            # carries the primary handle so the release targets the
+            # object holding the admit stamp
+            self.gateway.release(getattr(req, "_primary", req), self.now)
         res = RequestResult(rid=primary, fn=req.fn, ok=ok,
                             arrival_t=req.arrival_t, start_t=start_t,
                             finish_t=self.now, cold_start=cold,
@@ -863,6 +947,10 @@ class Simulator:
                     self._push(self.now + backoff, "retry", req)
                     return
         self._finished.add(primary)
+        if self.gateway is not None:
+            # terminal failure settles the request: free its admission
+            # slot (no-op for gateway-shed requests — never admitted)
+            self.gateway.release(getattr(req, "_primary", req), self.now)
         self.results.append(RequestResult(
             rid=primary, fn=req.fn, ok=False, arrival_t=req.arrival_t,
             start_t=self.now, finish_t=self.now, cold_start=False,
@@ -904,17 +992,29 @@ def summarize(results: List[RequestResult]) -> dict:
         return {"n": 0}
     lat = np.array([r.latency for r in results if r.ok])
     ok = sum(r.ok for r in results)
-    # throughput over the makespan, not absolute finish time: a run whose
-    # first arrival is at t0 > 0 (daily_cycle offsets, resumed run(until))
-    # must not have its rate diluted by the empty [0, t0) prefix
-    makespan = (max(r.finish_t for r in results)
-                - min(r.arrival_t for r in results))
+    # cold_rate over *served* rows only: failures that never reached an
+    # instance (gateway sheds, dead-on-arrival routing, queue timeouts —
+    # their instance column is "-") can't have had a cold start, so
+    # counting them in the denominator understated the rate under load
+    served = sum(1 for r in results if r.instance != "-")
+    # throughput/goodput over the useful makespan: last *successful*
+    # finish minus first arrival. Using failed rows' finish_t let one
+    # late queue-timeout tail (arrival + timeout_s) stretch the window
+    # and dilute the rate; arrivals still span all rows so a run whose
+    # first arrival is at t0 > 0 (daily_cycle offsets, resumed
+    # run(until)) isn't credited for the empty [0, t0) prefix
+    t0 = min(r.arrival_t for r in results)
+    t1 = max((r.finish_t for r in results if r.ok), default=t0)
+    makespan = t1 - t0
+    goodput = ok / max(makespan, 1e-9) if ok else 0.0
     return {
         "n": len(results), "ok": ok, "fail_rate": 1 - ok / len(results),
-        "cold_rate": sum(r.cold_start for r in results) / len(results),
+        "cold_rate": (sum(r.cold_start for r in results) / served
+                      if served else 0.0),
         "p50": float(np.percentile(lat, 50)) if len(lat) else float("nan"),
         "p95": float(np.percentile(lat, 95)) if len(lat) else float("nan"),
         "p99": float(np.percentile(lat, 99)) if len(lat) else float("nan"),
         "mean": float(lat.mean()) if len(lat) else float("nan"),
-        "throughput": ok / max(makespan, 1e-9),
+        "throughput": goodput,
+        "goodput": goodput,
     }

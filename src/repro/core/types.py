@@ -41,6 +41,10 @@ class Request:
     size: int = 16                     # prompt tokens (cost driver)
     rid: int = field(default_factory=lambda: next(_req_ids))
     hedged_from: Optional[int] = None  # straggler-mitigation clone marker
+    # gateway priority class ("interactive" | "batch"), stamped from
+    # FunctionProfile.priority by the workload layer; None falls back to
+    # the tenant quota's class at the front door (core/gateway.py)
+    priority: Optional[str] = None
     # absolute completion deadline (arrival + the function's slo_p95_s —
     # or, for a workflow stage, the stage's share of the end-to-end
     # workflow SLO), stamped by the workload layer; None => no latency

@@ -171,6 +171,43 @@ def retry_storm(*, rps: float = 400.0, duration_s: float = 10.0,
     return wl
 
 
+@register_scenario("noisy_neighbor")
+def noisy_neighbor(*, rps: float = 120.0, flood_x: float = 10.0,
+                   duration_s: float = 12.0, seed: int = 1,
+                   gateway: bool = True, flood_rate: float = 40.0,
+                   flood_burst: float = 20.0, max_inflight: int = 64,
+                   batch_share: float = 0.5,
+                   rid_base: Optional[int] = 0) -> MixedWorkload:
+    """Front-door scenario: two well-behaved interactive tenants plus a
+    ``flood`` batch tenant offering ``flood_x`` times their combined
+    load. Without a gateway the flood queues the shared fleet to its
+    timeout horizon and everyone's p95 blows through SLO; with the
+    carried :class:`~repro.core.gateway.GatewayConfig` (``wl.gateway``,
+    attached by ``Simulator.load`` like a fault plan) the flood is
+    rate-limited to ``flood_rate`` rps and the admission ceiling sheds
+    batch first, so the interactive tenants ride through within SLO.
+    ``gateway=False`` builds the no-gateway baseline for the A/B."""
+    from repro.core.gateway import GatewayConfig, TenantQuota
+    profiles = [
+        FunctionProfile("chat", weight=3.0, size=SizeDist.const(24),
+                        slo_p95_s=0.5, priority="interactive"),
+        FunctionProfile("embed", weight=1.0, size=SizeDist.const(32),
+                        slo_p95_s=1.0, priority="interactive"),
+        FunctionProfile("flood", weight=4.0 * flood_x,
+                        size=SizeDist.const(24), slo_p95_s=5.0,
+                        priority="batch"),
+    ]
+    wl = MixedWorkload(PoissonArrivals(rps * (1.0 + flood_x)), profiles,
+                       duration_s=duration_s, seed=seed, rid_base=rid_base)
+    if gateway:
+        wl.gateway = GatewayConfig(
+            quotas={"flood": TenantQuota(rate=flood_rate,
+                                         burst=flood_burst,
+                                         priority="batch")},
+            max_inflight=max_inflight, batch_share=batch_share)
+    return wl
+
+
 @register_scenario("ml_pipeline")
 def ml_pipeline(*, rps: float = 30.0, duration_s: float = 20.0,
                 seed: int = 1, slo_s: float = 2.0, audit_prob: float = 0.3,
@@ -263,6 +300,8 @@ _DEMO_CFG = {
     "chat": ("tiny_lm", 4, 0.15),
     "embed": ("tiny_lm", 8, 0.10),
     "batch": ("small_lm", 1, 0.40),
+    # noisy_neighbor's flooding batch tenant
+    "flood": ("tiny_lm", 4, 0.20),
     # workflow stage functions (ml_pipeline / etl_fanout): the heavy
     # middle stages carry the expensive cold starts
     "preprocess": ("tiny_lm", 4, 0.15),

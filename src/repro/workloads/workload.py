@@ -166,6 +166,10 @@ class FunctionProfile:
     # per-replica memory the placement layer bin-packs against worker
     # capacity; None => the FunctionConfig default (512 MB)
     memory_mb: Optional[int] = None
+    # gateway priority class ("interactive" | "batch") stamped onto every
+    # request this tenant emits; None => the front door falls back to the
+    # tenant quota's class (core/gateway.py), ultimately "interactive"
+    priority: Optional[str] = None
 
 
 class MixedWorkload:
@@ -216,10 +220,11 @@ class MixedWorkload:
                         else None)
             if rids is None:
                 yield Request(fn=p.fn, arrival_t=t, size=size,
-                              deadline_t=deadline)
+                              deadline_t=deadline, priority=p.priority)
             else:
                 yield Request(fn=p.fn, arrival_t=t, size=size,
-                              rid=next(rids), deadline_t=deadline)
+                              rid=next(rids), deadline_t=deadline,
+                              priority=p.priority)
 
     def generate(self) -> List[Request]:
         return list(self.requests())

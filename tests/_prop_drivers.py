@@ -417,3 +417,79 @@ def run_memory_cap_trial(seed: int) -> None:
         S._Worker.add_instance, S._Worker.remove_instance = orig_add, orig_rm
     for w in sim.workers.values():
         assert w.memory_used_mb <= cap + 1e-9
+
+
+def run_gateway_ops(seed: int, n_ops: int = 300) -> int:
+    """ISSUE-9 invariants for the front-door gateway under random
+    arrival / settle / retry-consult interleavings: token buckets stay
+    within ``[0, burst]``; per-tenant admits over the run never exceed
+    the bucket contract ``burst + rate * elapsed``; the inflight
+    counters mirror a flat outstanding set (per class, each within its
+    admission ceiling); and the same seed replays a byte-identical
+    ``(rid, verdict)`` stream. Returns the number of ops checked."""
+    from repro.core.gateway import (PRIORITIES, Gateway, GatewayConfig,
+                                    TenantQuota)
+
+    def trial():
+        rng = random.Random(seed)
+        quotas = {}
+        for fn in FNS:
+            if rng.random() < 0.75:
+                quotas[fn] = TenantQuota(
+                    rate=rng.choice([0.0, 1.0, 5.0, 50.0]),
+                    burst=rng.choice([1.0, 2.0, 8.0]),
+                    priority=rng.choice(PRIORITIES))
+        cfg = GatewayConfig(
+            quotas=quotas,
+            default_quota=rng.choice([None,
+                                      TenantQuota(rate=20.0, burst=4.0)]),
+            max_inflight=rng.choice([None, 2, 4, 16]),
+            batch_share=rng.choice([0.0, 0.25, 0.5, 1.0]))
+        gw = Gateway(cfg, record=True)
+        now = 0.0
+        rid = itertools.count()
+        outstanding = []          # reference model: admitted, unsettled
+        admit_ts = {}             # fn -> admit times (bucket contract)
+        bucket_t0 = {}            # fn -> first rate-limited consult
+        for _ in range(n_ops):
+            op = rng.random()
+            now += rng.random() * rng.choice([0.01, 0.1, 1.0])
+            if op < 0.7 or not outstanding:                # arrival
+                fn = rng.choice(FNS)
+                r = Request(fn=fn, arrival_t=now, rid=next(rid),
+                            priority=rng.choice([None, "interactive",
+                                                 "batch"]))
+                if quotas.get(fn, cfg.default_quota) is not None:
+                    bucket_t0.setdefault(fn, now)
+                if gw.admit(r, now) is None:
+                    outstanding.append(r)
+                    admit_ts.setdefault(fn, []).append(now)
+                    limit = gw._limit(gw.priority_of(r))
+                    if limit is not None:   # ceiling honoured at admit
+                        assert gw.inflight_by_pri[r._gw_pri] <= limit
+            elif op < 0.85:                                # settle
+                gw.release(outstanding.pop(rng.randrange(len(outstanding))),
+                           now)
+            else:                                          # retry consult
+                gw.admit(rng.choice(outstanding), now, retry=True)
+            for b in gw._buckets.values():
+                assert -1e-9 <= b.level <= b.burst + 1e-9
+            # inflight accounting mirrors the flat outstanding set
+            assert gw.inflight == len(outstanding)
+            by_pri = {p: 0 for p in PRIORITIES}
+            for r in outstanding:
+                by_pri[r._gw_pri] += 1
+            assert gw.inflight_by_pri == by_pri
+            assert gw.admitted_total == sum(len(v)
+                                            for v in admit_ts.values())
+        # token-bucket contract over the whole run, per tenant
+        for fn, ts in admit_ts.items():
+            quota = quotas.get(fn, cfg.default_quota)
+            if quota is not None:
+                budget = quota.burst + quota.rate * (ts[-1] - bucket_t0[fn])
+                assert len(ts) <= budget + 1e-6, (fn, len(ts), budget)
+        return gw.decision_records()
+
+    records = trial()
+    assert trial() == records     # same seed => byte-identical verdicts
+    return n_ops

@@ -288,8 +288,36 @@ def test_summarize_throughput_uses_makespan():
     s = summarize(shifted)
     # 10 ok requests over a 9.5s makespan — NOT over 109.5s absolute time
     assert s["throughput"] == pytest.approx(10 / 9.5)
+    assert s["goodput"] == s["throughput"]
+    # re-pinned in ISSUE-9 (was 1/3.0): the makespan now ends at the last
+    # *successful* finish (t=2.0), so the failed row's later finish_t
+    # (t=3.0 — think a queue-timeout tail firing at arrival+timeout_s)
+    # no longer stretches the window and dilutes the rate
     assert summarize([res(0.0, 2.0), res(1.0, 3.0, ok=False)])[
-        "throughput"] == pytest.approx(1 / 3.0)
+        "throughput"] == pytest.approx(1 / 2.0)
+
+
+def test_summarize_denominators_exclude_unserved_failures():
+    """ISSUE-9 bugfix: cold_rate divided by *all* rows, so failures that
+    never reached an instance (gateway sheds, no-healthy-workers — the
+    `instance == "-"` rows) diluted the cold-start rate; and a run with
+    zero successes reported throughput over a meaningless window."""
+    from repro.core.types import RequestResult
+
+    def res(arrival, finish, ok=True, cold=False, instance="i"):
+        return RequestResult(rid=0, fn="fn", ok=ok, arrival_t=arrival,
+                             start_t=arrival, finish_t=finish,
+                             cold_start=cold, worker="w0",
+                             instance=instance)
+    rows = [res(0.0, 1.0, cold=True),          # served, cold
+            res(0.0, 2.0, cold=False),         # served, warm
+            res(0.5, 0.5, ok=False, instance="-")]   # shed: never served
+    s = summarize(rows)
+    assert s["cold_rate"] == pytest.approx(0.5)   # 1 cold / 2 *served*
+    assert s["goodput"] == pytest.approx(2 / 2.0)
+    all_failed = summarize([res(0.0, 9.0, ok=False, instance="-")])
+    assert all_failed["goodput"] == 0.0
+    assert all_failed["cold_rate"] == 0.0
 
 
 # ------------------------------------------------------------ config store

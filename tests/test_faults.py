@@ -626,3 +626,107 @@ def test_default_fault_config_is_disabled():
     assert FaultConfig(scheduled=((1.0, "z0", 1.0),)).enabled
     assert FaultConfig(worker_mttf_s=10.0).enabled
     assert FaultConfig(lost_finish_p=0.1).enabled
+
+
+# ----------------------- ISSUE-9 satellite: stale-route re-roll + retries
+def test_stale_route_reroll_scores_with_leaf_policy():
+    """Satellite regression: a request routed to a worker that turned
+    unhealthy must be re-scored by the owning leaf's *policy* (and the
+    hop logged as ``arrival_reroll``) — the old path re-rolled with a
+    uniform ``rng.choice`` that bypassed both. Round-robin distinguishes
+    the two: the policy walks the healthy list deterministically."""
+    store = _store(concurrency=4, cold_start_s=0.0)
+    sim = Simulator(build_leaf("b", ["w0", "w1", "w2"], "round_robin"),
+                    store, SyntheticServiceModel(seed=2), seed=5,
+                    record_decisions=True)
+    sim.inject_failure("w1", at=0.0, recover_after=100.0)
+    sim.tree.route = lambda req, view, rng, t: ("w1", 1)   # stale pick
+    for i in range(4):
+        sim.submit(Request(fn="fn", arrival_t=0.01 + 0.001 * i, rid=i))
+    res = sim.run()
+    assert all(r.ok for r in res)
+    # the leaf's round-robin cycles w0, w2, w0, w2 over the healthy
+    # list; a uniform re-roll would not alternate strictly
+    assert [r.worker for r in sorted(res, key=lambda r: r.rid)] == \
+        ["w0", "w2", "w0", "w2"]
+    rerolls = [ln for ln in sim.routing_log().splitlines()
+               if "arrival_reroll" in ln]
+    assert len(rerolls) == 4           # the decision log saw every hop
+    assert "worker=w0" in rerolls[0] and "worker=w2" in rerolls[1]
+
+
+def test_retry_reroll_goes_through_policy_and_log():
+    store = _store(concurrency=1, cold_start_s=0.0)
+    sim = Simulator(build_leaf("b", ["w0", "w1"], "least_loaded"), store,
+                    SyntheticServiceModel(seed=2), seed=5, retry_budget=2,
+                    retry_backoff_s=0.05, record_decisions=True)
+    sim.tree.route = lambda req, view, rng, t: ("w0", 1)
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    sim.inject_failure("w0", at=0.01, recover_after=100.0)
+    res = sim.run()
+    assert len(res) == 1 and res[0].ok and res[0].worker == "w1"
+    assert sim.retries_scheduled == 1
+    assert "retry_reroll rid=0" in sim.routing_log()
+
+
+def test_retry_storm_accounting_reconciles():
+    """Satellite invariants: every retry-eligible failure is either
+    scheduled or shed (never silently lost), and the pending counter
+    drains to zero by end of run."""
+    wl = build_scenario("retry_storm", seed=3, rps=1500.0)
+    store = ConfigStore()
+    for p in wl.profiles:
+        store.put(FunctionConfig(name=p.fn, arch="tiny_lm", concurrency=4,
+                                 cold_start_s=1.0, timeout_s=8.0))
+    sim = Simulator(build_pool(3, 2, leaf_policy="warm_least_loaded",
+                               inner_policy="deadline_aware"),
+                    store, SyntheticServiceModel(seed=2, fail_rate=0.0),
+                    seed=7, zones=3, placer="spread_zones",
+                    worker_memory_mb=600, cold_start_default_s=1.0,
+                    retry_budget=3, retry_storm_cap=32)
+    offers = {"n": 0}
+    orig = sim._record_fail
+
+    def counting(req, err):
+        if (err in RETRYABLE_ERRORS and req.hedged_from is None
+                and getattr(req, "_retries", 0) < sim.retry_budget):
+            offers["n"] += 1
+        return orig(req, err)
+    sim._record_fail = counting
+    for p in wl.profiles:
+        for _ in range(3):
+            sim.place_prewarm(p.fn)
+    sim.load(wl)
+    sim.run()
+    assert sim._retries_pending == 0
+    assert sim.retries_shed > 0
+    assert sim.retries_scheduled + sim.retries_shed == offers["n"]
+
+
+def test_retry_dropped_when_hedge_settles_first():
+    """A pending retry whose primary meanwhile finished via a hedge
+    clone is dropped (not re-offered) and now counted in
+    ``retries_dropped`` — the drop used to be invisible, making
+    scheduled/settled reconciliation impossible."""
+    store = _store(concurrency=1, cold_start_s=0.0,
+                   max_instances_per_worker=1)    # rid 0 must *queue*
+    sim = Simulator(build_leaf("b", ["w0", "w1"], "round_robin"), store,
+                    SyntheticServiceModel(seed=2), seed=5,
+                    hedge_after_s=0.03, retry_budget=2,
+                    retry_backoff_s=5.0)
+    sim.set_straggler("w0", 1000.0)
+    # primaries pin to the straggler; hedge clones (rid < 0) to w1
+    sim.tree.route = lambda req, view, rng, t: \
+        (("w1", 1) if req.rid < 0 else ("w0", 1))
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=99))    # occupies w0
+    sim.submit(Request(fn="fn", arrival_t=0.001, rid=0))   # queued on w0
+    sim.inject_failure("w0", at=0.032, recover_after=100.0)
+    res = sim.run()
+    # the crash drains rid 0 from w0's queue -> "worker died" -> a retry
+    # is scheduled; its hedge clone then wins on w1, so the backoff
+    # expiry must drop the retry (and count it), not re-offer it
+    assert sorted(r.rid for r in res) == [0, 99]
+    assert all(r.ok and r.worker == "w1" for r in res)
+    assert sim.retries_scheduled == 1
+    assert sim.retries_dropped == 1
+    assert sim._retries_pending == 0

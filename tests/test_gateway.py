@@ -1,0 +1,421 @@
+"""Front-door gateway suite (ISSUE 9).
+
+Five contracts:
+
+1. **Mechanics** — token buckets refill continuously and never go
+   negative; priority resolution (request stamp > tenant quota >
+   interactive); per-class admission ceilings (batch sheds first,
+   against its *own* occupancy); release is exactly-once.
+2. **Terminal sheds** — ``rate limited`` / ``admission rejected`` are
+   final platform answers: recorded before routing, never retried.
+3. **Off = absent** — a ``GatewayConfig(enabled=False)`` (or no gateway
+   at all) run is byte-identical to the pre-gateway simulator; the
+   goldens in tests/test_scheduling.py pin the digests themselves.
+4. **Determinism + replay** — same seed ⇒ byte-identical verdict
+   sequence; a recorded verdict log replays byte-for-byte through
+   ``ReplayGateway`` and raises loudly on divergence.
+5. **The noisy-neighbor A/B** — under a 10x batch flood the gateway
+   holds every interactive tenant's p95 within SLO and beats the
+   no-gateway baseline's goodput on the same fleet (equal
+   worker-seconds); on a memory-tight fleet it un-starves tenants the
+   flood had pinned to *zero* completions.
+"""
+import pytest
+
+from repro.autoscale import Autoscaler, build_pool
+from repro.autoscale.replay import ReplayGateway
+from repro.core.config_store import ConfigStore
+from repro.core.gateway import (ADMISSION_REJECTED, RATE_LIMITED, Gateway,
+                                GatewayConfig, TenantQuota, TokenBucket)
+from repro.core.router import build_leaf
+from repro.core.simulator import (RETRYABLE_ERRORS, Simulator,
+                                  SyntheticServiceModel, summarize)
+from repro.core.types import FunctionConfig, Request
+from repro.workloads import build_scenario
+
+from _prop_drivers import digest_sim as _digest
+
+# -------------------------------------------------------------- mechanics
+
+
+def test_token_bucket_continuous_refill():
+    b = TokenBucket(rate=2.0, burst=3.0)
+    assert [b.take(0.0) for _ in range(4)] == [True, True, True, False]
+    assert b.level == pytest.approx(0.0)       # empty, never negative
+    assert not b.take(0.4)                     # 0.8 tokens: still short
+    assert b.take(0.5)                         # 1.0 accrued
+    # refill caps at burst regardless of idle time
+    b2 = TokenBucket(rate=100.0, burst=2.0)
+    assert b2.take(0.0) and b2.take(100.0)
+    assert b2.level == pytest.approx(1.0)
+
+
+def test_priority_resolution_order():
+    gw = Gateway(GatewayConfig(
+        quotas={"f": TenantQuota(rate=10.0, priority="batch")}))
+    stamped = Request(fn="f", arrival_t=0.0, rid=0, priority="interactive")
+    quota_only = Request(fn="f", arrival_t=0.0, rid=1)
+    unknown = Request(fn="g", arrival_t=0.0, rid=2)
+    assert gw.priority_of(stamped) == "interactive"   # stamp wins
+    assert gw.priority_of(quota_only) == "batch"      # quota default
+    assert gw.priority_of(unknown) == "interactive"   # global default
+
+
+def test_admission_ceiling_is_per_class():
+    """Batch is capped at ``batch_share * max_inflight`` against its
+    *own* occupancy — interactive backlog must not starve batch out of
+    its share, and a batch flood cannot occupy interactive headroom."""
+    gw = Gateway(GatewayConfig(max_inflight=4, batch_share=0.5))
+    mk = lambda i, pri: Request(fn="f", arrival_t=0.0, rid=i,  # noqa: E731
+                                priority=pri)
+    assert gw.admit(mk(0, "batch"), 0.0) is None
+    assert gw.admit(mk(1, "batch"), 0.0) is None
+    assert gw.admit(mk(2, "batch"), 0.0) == ADMISSION_REJECTED
+    # interactive has its own ceiling (4), untouched by batch occupancy
+    for i in range(4):
+        assert gw.admit(mk(10 + i, "interactive"), 0.0) is None
+    assert gw.admit(mk(14, "interactive"), 0.0) == ADMISSION_REJECTED
+    # ... and batch stays saturated even though interactive is too
+    assert gw.inflight_by_pri == {"interactive": 4, "batch": 2}
+    assert gw.inflight == 6
+
+
+def test_release_exactly_once():
+    gw = Gateway(GatewayConfig(max_inflight=2))
+    r = Request(fn="f", arrival_t=0.0, rid=0)
+    assert gw.admit(r, 0.0) is None
+    gw.release(r, 1.0)
+    gw.release(r, 1.0)                  # double-release: no-op
+    assert gw.inflight == 0
+    assert gw.inflight_by_pri["interactive"] == 0
+    shed = Request(fn="f", arrival_t=0.0, rid=1)
+    gw2 = Gateway(GatewayConfig(default_quota=TenantQuota(rate=0.0,
+                                                          burst=0.0)))
+    assert gw2.admit(shed, 0.0) == RATE_LIMITED
+    gw2.release(shed, 1.0)              # shed was never admitted: no-op
+    assert gw2.inflight == 0
+
+
+def test_retry_consult_only_rechecks_saturation():
+    """A retry already holds its slot and paid its token: it is refused
+    only when its class is saturated, and an admitted retry must not
+    double-count inflight or burn a second token."""
+    gw = Gateway(GatewayConfig(
+        quotas={"f": TenantQuota(rate=0.0, burst=1.0)}, max_inflight=8))
+    r = Request(fn="f", arrival_t=0.0, rid=0)
+    assert gw.admit(r, 0.0) is None                   # spends the only token
+    assert gw.admit(r, 1.0, retry=True) is None       # no second token needed
+    assert gw.inflight == 1
+    assert gw.admitted_total == 1
+
+
+# --------------------------------------------------------- terminal sheds
+
+
+def _leaf_sim(gateway, **over):
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=4,
+                             cold_start_s=0.0, timeout_s=8.0))
+    return Simulator(build_leaf("b", ["w0"], "least_loaded"), store,
+                     SyntheticServiceModel(seed=2), seed=5,
+                     gateway=gateway, **over)
+
+
+def test_rate_limit_shed_is_terminal_not_retryable():
+    assert RATE_LIMITED not in RETRYABLE_ERRORS
+    assert ADMISSION_REJECTED not in RETRYABLE_ERRORS
+    sim = _leaf_sim(GatewayConfig(
+        quotas={"fn": TenantQuota(rate=1.0, burst=2.0)}), retry_budget=3)
+    for i in range(5):                  # burst of 5 at t=0: 2 tokens
+        sim.submit(Request(fn="fn", arrival_t=0.0, rid=i))
+    res = sim.run()
+    shed = [r for r in res if not r.ok]
+    assert len(shed) == 3
+    assert all(r.error == RATE_LIMITED for r in shed)
+    # a shed is a final answer: recorded before routing, never retried
+    assert all(r.instance == "-" and r.finish_t == r.arrival_t
+               for r in shed)
+    assert sim.retries_scheduled == 0
+    assert sim.gateway.summary()["shed_by_error"] == {RATE_LIMITED: 3}
+
+
+def test_shed_accounting_reconciles_with_arrivals():
+    sim = _leaf_sim(GatewayConfig(
+        quotas={"fn": TenantQuota(rate=10.0, burst=1.0)}))
+    for i in range(20):
+        sim.submit(Request(fn="fn", arrival_t=0.01 * i, rid=i))
+    sim.run()
+    gw = sim.gateway
+    assert gw.admitted_total + gw.shed_total == sim.arrivals_seen
+    assert gw.inflight == 0             # every admit was released
+    assert gw.inflight_by_pri == {"interactive": 0, "batch": 0}
+
+
+def test_hedge_clones_bypass_the_gateway():
+    """Hedge clones are the platform's own speculation — they must not
+    spend tenant tokens or admission slots (the primary already holds
+    its slot; a winning clone releases *that* slot via its handle)."""
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=1,
+                             cold_start_s=0.0))
+    sim = Simulator(build_leaf("b", ["w0", "w1"], "least_loaded"), store,
+                    SyntheticServiceModel(seed=2), seed=5,
+                    hedge_after_s=0.02,
+                    gateway=GatewayConfig(
+                        quotas={"fn": TenantQuota(rate=1.0, burst=1.0)}))
+    sim.set_straggler("w0", 50.0)
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    res = sim.run()
+    assert len(res) == 1 and res[0].ok
+    assert res[0].worker == "w1"        # the clone won
+    assert sim.hedges_seen == 1
+    gw = sim.gateway
+    assert gw.admitted_total == 1       # the primary, once
+    assert gw.shed_total == 0
+    assert gw.inflight == 0             # winner's release hit the primary
+
+
+# ----------------------------------------------------------- off = absent
+
+
+def _steady_sim(gateway):
+    from repro.workloads import install_demo_configs
+    wl = build_scenario("steady", rps=200.0, duration_s=4.0, seed=3)
+    store = ConfigStore()
+    install_demo_configs(store, wl)
+    sim = Simulator(build_pool(1, 2), store, SyntheticServiceModel(seed=2),
+                    seed=7, gateway=gateway)
+    sim.load(wl)
+    sim.run()
+    return sim
+
+
+def test_disabled_config_is_byte_identical_to_no_gateway():
+    base = _steady_sim(None)
+    off = _steady_sim(GatewayConfig(enabled=False))
+    assert off.gateway is None          # disabled config attaches nothing
+    assert _digest(off) == _digest(base)
+    # an enabled-but-unlimited gateway changes no routing/service byte
+    # either — it only adds accounting
+    unlimited = _steady_sim(GatewayConfig())
+    assert unlimited.gateway is not None
+    assert _digest(unlimited) == _digest(base)
+    assert unlimited.gateway.admitted_total == unlimited.arrivals_seen
+
+
+# --------------------------------------------------- determinism + replay
+
+
+def test_same_seed_byte_identical_verdicts():
+    a = _noisy_sim(gateway=True, record=True)
+    b = _noisy_sim(gateway=True, record=True)
+    assert a.gateway.decision_records() == b.gateway.decision_records()
+    assert a.gateway_log() == b.gateway_log()
+    assert a.gateway_log()              # non-empty: verdicts were logged
+    assert _digest(a) == _digest(b)
+
+
+def test_recorded_verdicts_replay_byte_identically():
+    live = _noisy_sim(gateway=True, record=True)
+    records = live.gateway.decision_records()
+    assert any(r["verdict"] != "admit" for r in records)
+    replay = _noisy_sim(gateway=ReplayGateway(records))
+    assert _digest(replay) == _digest(live)
+    assert replay.gateway.summary() == live.gateway.summary()
+
+
+def test_replay_divergence_raises():
+    gw = ReplayGateway([{"rid": 7, "verdict": "admit"}])
+    with pytest.raises(ValueError, match="diverged"):
+        gw.admit(Request(fn="f", arrival_t=0.0, rid=8), 0.0)
+
+
+# ------------------------------------------------- the noisy-neighbor A/B
+#
+# Calibrated rig (same fleet both arms — equal worker-seconds): two
+# memory-capped workers, a 10x Poisson batch flood over two interactive
+# tenants, hedging on. The flood's per-worker replica cap (1) means the
+# baseline never *starves* the interactive tenants of memory — instead
+# it queues itself to the 8 s timeout horizon, and every queued request
+# crosses the 0.6 s hedge threshold: ~14k clones double the flood's
+# service demand and halve the fleet's useful capacity. The gateway's
+# batch admission ceiling keeps the flood's outstanding work at 6, so
+# its queue never builds, nothing hedges, and the same fleet clears
+# ~1.65x the goodput with the flood's own p95 down from 8 s to 43 ms.
+
+_CONC = {"chat": 4, "embed": 2, "flood": 2}
+_SLO = {"chat": 0.5, "embed": 1.0, "flood": 5.0}
+
+
+def _noisy_sim(*, gateway, record=False, mem=1536, flood_maxi=1,
+               batch_limit=6):
+    gw_kw = {}
+    if gateway is True:
+        # max_inflight * batch_share = the batch admission ceiling
+        gw_kw = dict(flood_rate=400.0, flood_burst=8.0,
+                     max_inflight=4 * batch_limit, batch_share=0.25)
+    wl = build_scenario("noisy_neighbor", gateway=gateway is True,
+                        seed=3, duration_s=12.0, **gw_kw)
+    store = ConfigStore()
+    for p in wl.profiles:
+        store.put(FunctionConfig(
+            name=p.fn, arch="tiny_lm", concurrency=_CONC[p.fn],
+            cold_start_s=0.2, timeout_s=8.0,
+            idle_timeout_s=1.0 if p.fn == "flood" else 10.0,
+            max_instances_per_worker=(flood_maxi if p.fn == "flood"
+                                      else 8)))
+    sim = Simulator(build_pool(1, 2, leaf_policy="warm_least_loaded",
+                               inner_policy="round_robin"),
+                    store, SyntheticServiceModel(seed=2, fail_rate=0.0),
+                    seed=11, hedge_after_s=0.6, worker_memory_mb=mem,
+                    record_decisions=record)
+    if not isinstance(gateway, bool) and gateway is not None:
+        sim.attach_gateway(gateway)
+    sim.load(wl)
+    sim.run()
+    return sim
+
+
+def _per_fn(sim):
+    out = {}
+    for fn in _SLO:
+        rows = [r for r in sim.results if r.fn == fn]
+        lat = sorted(r.latency for r in rows if r.ok)
+        out[fn] = dict(
+            offered=len(rows), ok=len(lat),
+            p95=lat[int(0.95 * len(lat))] if lat else None,
+            slo_ok=sum(1 for r in rows
+                       if r.ok and r.latency <= _SLO[r.fn]))
+    return out
+
+
+def test_noisy_neighbor_gateway_wins_goodput_and_holds_slo():
+    """The acceptance A/B: same fleet, same seed, gateway on vs off."""
+    base = _noisy_sim(gateway=False)
+    gated = _noisy_sim(gateway=True)
+    assert sorted(base.workers) == sorted(gated.workers)  # equal fleet
+    gp_base = summarize(base.results)["goodput"]
+    gp_gw = summarize(gated.results)["goodput"]
+    assert gp_gw >= 1.2 * gp_base, (gp_gw, gp_base)
+    pf_base, pf_gw = _per_fn(base), _per_fn(gated)
+    # every non-flood tenant's p95 holds within SLO under the flood
+    for fn in ("chat", "embed"):
+        assert pf_gw[fn]["p95"] <= _SLO[fn], (fn, pf_gw[fn])
+        assert pf_gw[fn]["ok"] >= 0.95 * pf_gw[fn]["offered"]
+    # the baseline flood queues to the timeout horizon and mass-hedges;
+    # the admission ceiling collapses both
+    assert pf_base["flood"]["p95"] > _SLO["flood"]
+    assert pf_gw["flood"]["p95"] < 0.5
+    assert base.hedges_seen > 1000
+    assert gated.hedges_seen < 50
+    assert gated.gateway.shed_by_error[ADMISSION_REJECTED] > 0
+
+
+def test_noisy_neighbor_gateway_unstarves_pinned_tenants():
+    """On a roomier fleet with no per-worker replica cap the flood wins
+    every memory slot at t=0 and pins ``embed`` to *zero* completions
+    for the whole run; the batch admission ceiling bounds the flood's
+    replica footprint, so both interactive tenants come back within SLO
+    — and the flood itself drops from the 8 s timeout horizon to tens
+    of milliseconds. The *interactive* class's SLO-goodput is what the
+    isolation buys (the aggregate win is the A/B test above)."""
+    base = _noisy_sim(gateway=False, mem=2048, flood_maxi=8)
+    gated = _noisy_sim(gateway=True, mem=2048, flood_maxi=8,
+                       batch_limit=5)
+    pf_base, pf_gw = _per_fn(base), _per_fn(gated)
+    assert pf_base["embed"]["ok"] == 0          # fully starved
+    for fn in ("chat", "embed"):
+        assert pf_gw[fn]["ok"] >= 0.95 * pf_gw[fn]["offered"]
+        assert pf_gw[fn]["p95"] <= _SLO[fn]
+    assert pf_gw["flood"]["p95"] < 0.5
+    inter = lambda pf: pf["chat"]["slo_ok"] + pf["embed"]["slo_ok"]  # noqa: E731
+    assert inter(pf_gw) > 1.25 * inter(pf_base)
+
+
+# ------------------------------------------------------- control plane
+
+
+def test_gateway_verdict_log_records_arrival_sheds():
+    sim = _noisy_sim(gateway=True, record=True)
+    log = sim.gateway_log().splitlines()
+    assert log
+    assert all(line.startswith("t=") and " rid=" in line for line in log)
+    assert any("verdict=admission rejected" in line for line in log)
+    assert any("verdict=admit" in line for line in log)
+    # one verdict line per offered (non-hedge) arrival
+    assert len([ln for ln in log if " arrival " in ln]) == sim.arrivals_seen
+
+
+def test_fn_samples_carry_shed_and_goodput():
+    wl = build_scenario("noisy_neighbor", gateway=True, seed=3,
+                        duration_s=4.0, flood_rate=40.0, flood_burst=8.0,
+                        max_inflight=64, batch_share=0.25)
+    store = ConfigStore()
+    for p in wl.profiles:
+        store.put(FunctionConfig(name=p.fn, arch="tiny_lm",
+                                 concurrency=_CONC[p.fn], cold_start_s=0.2,
+                                 timeout_s=8.0))
+    sim = Simulator(build_pool(1, 2), store,
+                    SyntheticServiceModel(seed=2, fail_rate=0.0), seed=11)
+    scaler = Autoscaler("reactive", interval_s=0.25, window_s=16.0,
+                        min_replicas=1, max_replicas=1)
+    sim.attach_autoscaler(scaler)
+    sim.load(wl)
+    sim.run()
+    rows = [f for s in scaler.window.samples for f in s.fns]
+    flood = [f for f in rows if f.fn == "flood"]
+    assert sum(f.shed for f in flood) > 0
+    assert sum(f.goodput for f in flood) > 0
+    # with a gateway attached, per-fn arrivals are the *admitted* delta
+    assert (sum(f.arrivals for f in flood)
+            <= sim.gateway.admitted_by_fn["flood"])
+    # interactive tenants were never shed in this shape
+    assert sum(f.shed for f in rows if f.fn == "chat") == 0
+
+
+def test_scenario_carries_gateway_config_and_load_attaches_once():
+    wl = build_scenario("noisy_neighbor", seed=1, flood_rate=10.0,
+                        max_inflight=16)
+    assert isinstance(wl.gateway, GatewayConfig)
+    assert wl.gateway.quotas["flood"].rate == 10.0
+    assert wl.gateway.quotas["flood"].priority == "batch"
+    store = ConfigStore()
+    for p in wl.profiles:
+        store.put(FunctionConfig(name=p.fn, arch="tiny_lm", concurrency=4,
+                                 cold_start_s=0.1))
+    sim = Simulator(build_pool(1, 2), store, SyntheticServiceModel(seed=2),
+                    seed=5)
+    sim.load(wl)
+    assert sim.gateway is not None
+    assert sim.gateway.config is wl.gateway
+    # an explicitly attached gateway is not overwritten by load()
+    sim2 = Simulator(build_pool(1, 2), store, SyntheticServiceModel(seed=2),
+                     seed=5, gateway=GatewayConfig(max_inflight=4))
+    gw = sim2.gateway
+    sim2.load(build_scenario("noisy_neighbor", seed=1))
+    assert sim2.gateway is gw
+
+
+def test_custom_admission_policy_subclass():
+    """The override point the README documents: subclass + ``decide``
+    carries a bespoke policy while admit/release keep the bookkeeping."""
+    class BlockTenant(Gateway):
+        def decide(self, req, now, *, retry):
+            if req.fn == "fn" and not retry:
+                return ADMISSION_REJECTED
+            return super().decide(req, now, retry=retry)
+
+    sim = _leaf_sim(BlockTenant(GatewayConfig()))
+    sim.submit(Request(fn="fn", arrival_t=0.0, rid=0))
+    res = sim.run()
+    assert len(res) == 1 and not res[0].ok
+    assert res[0].error == ADMISSION_REJECTED
+    assert sim.gateway.shed_total == 1 and sim.gateway.inflight == 0
+
+
+def test_priority_stamped_from_function_profile():
+    wl = build_scenario("noisy_neighbor", seed=1, duration_s=0.5)
+    reqs = list(wl.requests())
+    pri = {r.fn: r.priority for r in reqs}
+    assert pri["flood"] == "batch"
+    assert pri["chat"] == "interactive"

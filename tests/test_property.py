@@ -274,3 +274,13 @@ def test_data_stream_deterministic(step, seed):
     np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
     assert b1["tokens"].max() < 512 and b1["tokens"].min() >= 0
     np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_gateway_accounting(seed):
+    """ISSUE-9 gateway invariants: buckets within [0, burst], admits
+    within the bucket contract, inflight mirrors the outstanding set
+    per priority class, same seed => byte-identical verdicts."""
+    from _prop_drivers import run_gateway_ops
+    assert run_gateway_ops(seed) > 0

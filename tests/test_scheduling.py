@@ -281,3 +281,9 @@ def test_fnqueues_fifo_and_deadline_heap_under_interleaved_ops(seed):
 def test_replica_index_agrees_with_iid_map_under_churn(seed):
     from _prop_drivers import run_replica_index_ops
     assert run_replica_index_ops(seed) > 0
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_gateway_accounting_under_interleaved_ops(seed):
+    from _prop_drivers import run_gateway_ops
+    assert run_gateway_ops(seed) > 0
