@@ -81,6 +81,52 @@ class MetricsSample:
         return None
 
 
+def merge_fleet_samples(samples) -> MetricsSample:
+    """Combine per-partition :class:`MetricsSample` rows into one
+    whole-fleet observation (the windowed metrics exchange of
+    ``repro.parallel``).
+
+    Counters and deltas sum; per-function rows merge by name with
+    ``p95_est`` taken as the max across partitions (a conservative
+    fleet-tail estimate — partitions see disjoint tenants, so their
+    windows cannot be pooled exactly); ``t`` is the latest partition
+    clock. Input order does not matter: rows re-sort by name, so the
+    merge is deterministic regardless of summary arrival order.
+    """
+    samples = [s for s in samples if s is not None]
+    if not samples:
+        return MetricsSample(t=0.0, replicas=0, workers=0, queue=0,
+                             inflight=0, arrivals=0, completions=0,
+                             cold_starts=0)
+    by_fn: dict = {}
+    for s in samples:
+        for f in s.fns:
+            prev = by_fn.get(f.fn)
+            if prev is None:
+                by_fn[f.fn] = f
+            else:
+                by_fn[f.fn] = FnSample(
+                    fn=f.fn, queue=prev.queue + f.queue,
+                    inflight=prev.inflight + f.inflight,
+                    arrivals=prev.arrivals + f.arrivals,
+                    completions=prev.completions + f.completions,
+                    warm=prev.warm + f.warm,
+                    p95_est=max(prev.p95_est, f.p95_est),
+                    shed=prev.shed + f.shed,
+                    goodput=prev.goodput + f.goodput)
+    return MetricsSample(
+        t=max(s.t for s in samples),
+        replicas=sum(s.replicas for s in samples),
+        workers=sum(s.workers for s in samples),
+        queue=sum(s.queue for s in samples),
+        inflight=sum(s.inflight for s in samples),
+        arrivals=sum(s.arrivals for s in samples),
+        completions=sum(s.completions for s in samples),
+        cold_starts=sum(s.cold_starts for s in samples),
+        fns=tuple(by_fn[k] for k in sorted(by_fn)),
+        unhealthy=sum(s.unhealthy for s in samples))
+
+
 class MetricsWindow:
     """Bounded deque of samples with the aggregates policies consume."""
 

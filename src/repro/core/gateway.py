@@ -159,6 +159,17 @@ class Gateway:
                                                 t0=now)
         return b
 
+    def set_ceiling(self, max_inflight: Optional[int]) -> None:
+        """Re-point the platform-wide concurrency ceiling (the config
+        itself is frozen). This is the window-barrier knob the parallel
+        runner turns (``repro.parallel``): a global ``max_inflight`` is
+        split across partition-local gateways and re-apportioned from
+        exchanged occupancy summaries at each barrier. Already-admitted
+        work is never evicted — a lowered ceiling only gates *new*
+        admits, exactly like a config push on a live front door."""
+        from dataclasses import replace
+        self.config = replace(self.config, max_inflight=max_inflight)
+
     def _limit(self, pri: str) -> Optional[int]:
         cap = self.config.max_inflight
         if cap is None:

@@ -84,6 +84,31 @@ class Placer:
         first. Default: the simulator's warmest-first preference order."""
         return list(workers)
 
+    def blocked_cold_eta_s(self, need_mb: float, free_mb: float,
+                           svc_s: float, depth: int,
+                           inflight: int) -> float:
+        """Graded ETA for a memory-blocked cold start on one leaf.
+
+        ``deadline_aware`` routing historically priced a blocked cold
+        start with a flat ~infinite penalty, which ranks a leaf that is
+        1 MB short identically to one that needs the whole worker to
+        drain. This hook prices the *unblock* instead: memory frees as
+        outstanding work (queued + in flight) completes, so the expected
+        wait is the per-request service time times the share of that
+        work that must finish before the deficit closes. The estimate is
+        capped at the flat penalty so a graded leaf can never outrank
+        the flat model's view of an unblocked one.
+
+        Opt-in: the simulator only wires this into
+        ``StateView.mem_eta`` under ``mem_eta="placer"`` — the default
+        flat penalty keeps every existing golden digest byte-identical.
+        """
+        from repro.core.router import MEM_BLOCKED_PENALTY_S
+        deficit = max(need_mb - free_mb, 0.0) / max(need_mb, 1.0)
+        outstanding = max(inflight + depth, 1)
+        eta = max(svc_s, 1e-6) * outstanding * min(deficit, 1.0)
+        return min(eta, MEM_BLOCKED_PENALTY_S)
+
 
 @register_placer
 class FirstFitPlacer(Placer):

@@ -14,6 +14,7 @@ which the testbed can delay/stale-ify to study the cost of state freshness.
 from __future__ import annotations
 
 import random
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Mapping, Sequence
 
@@ -66,6 +67,13 @@ class StateView:
         # config store): lets deadline routing see that a cold start on a
         # memory-full worker cannot even begin
         self.fn_memory: Dict[str, float] = {}
+        # placer-aware pricing of memory-blocked cold starts: when set
+        # (Simulator(mem_eta="placer")), deadline routing asks the
+        # placement layer for a graded unblock ETA instead of the flat
+        # MEM_BLOCKED_PENALTY_S surcharge. None (default) keeps the
+        # flat penalty — standalone router use and every pre-existing
+        # golden are byte-identical.
+        self.mem_eta = None
         # fallback for names with no stored row — the simulator resolves
         # *inner* LB-node names to lazily-aggregated subtree states, so
         # deadline routing stays informed above the leaf level in trees
@@ -116,6 +124,26 @@ def round_robin_policy():
 
 def hash_policy(req, workers, view, rng, t):
     return workers[hash((req.fn, req.rid // 64)) % len(workers)]
+
+
+def tenant_index(name: str, n: int) -> int:
+    """Stable tenant → bucket assignment (crc32, not Python ``hash`` —
+    which is salted per process and would break cross-process
+    byte-identity). Shared by :func:`tenant_hash_policy` and the
+    parallel partition planner (``repro.parallel``), so a serial tree
+    whose root routes with ``tenant_hash`` sends every tenant to
+    exactly the branch the partitioned run owns it in."""
+    return zlib.crc32(name.encode()) % max(n, 1)
+
+
+def tenant_hash_policy(req, workers, view, rng, t):
+    """Pin each tenant (function) to one child, deterministically and
+    with **no RNG and no state**: the exact "tenants don't share
+    branches" shape under which partition-local gateway quota splitting
+    is equivalent to a global front door (multi_tenant / noisy_neighbor
+    / Azure-trace mixes). Consuming no RNG is what makes a serial run
+    over the union tree byte-identical to the per-partition runs."""
+    return workers[tenant_index(req.fn, len(workers))]
 
 
 def least_loaded_policy(req, workers, view, rng, t):
@@ -194,7 +222,16 @@ def deadline_aware_policy(req, workers, view, rng, t):
             if req.fn not in ws.warm_fns:
                 eta += view.cold_start_est_s
                 if ws.mem_free_mb < need_mb:
-                    eta += MEM_BLOCKED_PENALTY_S
+                    # flat penalty by default; with a placer-aware hook
+                    # attached, price the *wait until the deficit frees*
+                    # instead — a nearly-free idle worker can then beat
+                    # a startable-but-drowning one (carried ROADMAP
+                    # follow-on, A/B'd in tests/test_placement.py)
+                    if view.mem_eta is None:
+                        eta += MEM_BLOCKED_PENALTY_S
+                    else:
+                        eta += view.mem_eta(need_mb, ws.mem_free_mb, svc,
+                                            depth, ws.inflight)
         scored.append((eta > slack, eta, ws.load, rng.random(), w))
     return min(scored)[-1]
 
@@ -285,6 +322,7 @@ POLICIES: Dict[str, Callable] = {
     "random": lambda: random_policy,
     "round_robin": round_robin_policy,
     "hash": lambda: hash_policy,
+    "tenant_hash": lambda: tenant_hash_policy,
     "least_loaded": lambda: least_loaded_policy,
     "pow2": lambda: pow2_policy,
     "warm_affinity": lambda: warm_affinity_policy,
@@ -293,7 +331,7 @@ POLICIES: Dict[str, Callable] = {
     "workflow_aware": lambda: workflow_aware_policy,
 }
 
-STATELESS = {"random", "round_robin", "hash"}
+STATELESS = {"random", "round_robin", "hash", "tenant_hash"}
 
 
 # ---------------------------------------------------------------------------

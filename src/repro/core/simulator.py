@@ -123,6 +123,7 @@ class Simulator:
                  worker_capacity_slots: int = 16,
                  worker_memory_mb: Optional[float] = None,
                  placer="first_fit",
+                 mem_eta: str = "flat",
                  record_decisions: bool = False,
                  event_backend="single_heap",
                  collect_telemetry: bool = True,
@@ -132,7 +133,8 @@ class Simulator:
                  retry_backoff_cap_s: float = 1.0,
                  retry_storm_cap: int = 512,
                  faults=None,
-                 gateway=None):
+                 gateway=None,
+                 iid_scope: str = "sim"):
         self.tree = tree
         self.store = store
         self.model = service_model
@@ -146,6 +148,13 @@ class Simulator:
         # admission passes and behaviour is byte-identical to the
         # pre-placement simulator (pinned in tests/test_placement.py)
         self.worker_memory_mb = worker_memory_mb
+        # "flat" keeps deadline_aware's classic ~infinite penalty on
+        # memory-blocked cold starts (golden-pinned); "placer" prices
+        # them with the placer's graded unblock ETA instead
+        if mem_eta not in ("flat", "placer"):
+            raise ValueError(f"mem_eta must be 'flat' or 'placer', "
+                             f"got {mem_eta!r}")
+        self.mem_eta_mode = mem_eta
         # control plane (autoscaler + placement + decision logs) — lazy
         # import so the core layer has no hard autoscale dependency
         from repro.autoscale.control import ControlPlane
@@ -195,7 +204,18 @@ class Simulator:
         self.engine = EventEngine(event_backend,
                                   background=("autoscale_tick", "fault"))
         self._push = self.engine.push      # hot path: skip a delegation hop
+        # instance-id allocation scope: "sim" (default) numbers instances
+        # from one fleet-wide counter — the historical behaviour every
+        # golden digest pins; "worker" numbers per worker, making iids a
+        # pure function of that worker's own event sequence — required
+        # for serial ≡ K-partition byte-equality (repro.parallel), where
+        # a fleet-wide counter would leak the global interleaving into
+        # instance names
+        if iid_scope not in ("sim", "worker"):
+            raise ValueError(f"iid_scope must be 'sim' or 'worker', "
+                             f"got {iid_scope!r}")
         self._iid = itertools.count()
+        self._iid_by_worker = {} if iid_scope == "worker" else None
         self.now = 0.0
         self.events_processed = 0
         self.arrivals_seen = 0
@@ -279,6 +299,36 @@ class Simulator:
 
     def _log_placement(self, kind: str, w: Worker, fn: str) -> None:
         self.control.log_placement(kind, w, fn)
+
+    # ------------------------------------------------------ partition hooks
+    def _alloc_iid(self, w) -> str:
+        """Next instance id on worker ``w`` (see ``iid_scope``)."""
+        if self._iid_by_worker is None:
+            return f"{w.name}/i{next(self._iid)}"
+        c = self._iid_by_worker.get(w.name)
+        if c is None:
+            c = self._iid_by_worker[w.name] = itertools.count()
+        return f"{w.name}/i{next(c)}"
+
+    def occupancy_summary(self) -> dict:
+        """Deterministic snapshot the parallel runner exchanges at window
+        barriers (``repro.parallel``): outstanding work plus gateway
+        occupancy. A pure function of partition state — no RNG, no
+        events — so barrier directives derived from it keep same-seed
+        runs byte-identical."""
+        queued = inflight = 0
+        for w in self.workers.values():
+            queued += len(w.queue)
+            inflight += w.inflight()
+        d = {"now": self.now,
+             "pending_real": self.engine.pending_real,
+             "queued": queued, "inflight": inflight,
+             "arrivals": self.arrivals_seen,
+             "results": len(self.results)}
+        if self.gateway is not None:
+            d["gw_inflight"] = self.gateway.inflight
+            d["gw_by_pri"] = dict(self.gateway.inflight_by_pri)
+        return d
 
     # ----------------------------------------------------------- event API
     def submit(self, req: Request):
@@ -393,6 +443,8 @@ class Simulator:
             self.view.estimator = ServiceEstimator()
         self.view.cold_start_est_s = self.cold_default
         self.view.node_resolver = self._resolve_node_state
+        if self.mem_eta_mode == "placer":
+            self.view.mem_eta = self.placer.blocked_cold_eta_s
         self._branch_view_needed = True
 
     def _rebuild_leaf_index(self):
@@ -984,6 +1036,81 @@ def poisson_load(sim: Simulator, *, fn: str, rps: float, duration_s: float,
         [FunctionProfile(fn, size=SizeDist.const(prompt_tokens))],
         duration_s=duration_s, seed=seed, rid_base=None)
     return sim.load(wl)
+
+
+def stream_digest(sim) -> str:
+    """sha256[:16] over a run's full result + telemetry + workflow
+    streams — THE byte-identity projection every golden/equivalence
+    suite compares (one definition, so the suites can never drift apart
+    on which fields "byte-identical" covers). Accepts anything exposing
+    ``results`` / ``telemetry`` / ``workflow_results`` — a
+    :class:`Simulator` or a ``repro.parallel.MergedRun``."""
+    import hashlib
+    h = hashlib.sha256()
+    for r in sim.results:
+        h.update(repr((r.rid, r.fn, r.ok, r.arrival_t, r.start_t, r.finish_t,
+                       r.cold_start, r.worker, r.instance, r.error)).encode())
+    for t in sim.telemetry:
+        h.update(repr((t.fn, t.t, t.queue_len, t.inflight, t.batch_size,
+                       t.cold, t.latency, t.ok)).encode())
+    for w in getattr(sim, "workflow_results", ()):
+        h.update(repr((w.wf, w.name, w.ok, w.arrival_t, w.finish_t,
+                       w.tasks, w.error)).encode())
+    return h.hexdigest()[:16]
+
+
+def part_summary(results) -> dict:
+    """Mergeable partial of :func:`summarize` over one result stream
+    (a partition's share): raw counts plus the ok-latency sample, so
+    :func:`merge_part_summaries` reproduces ``summarize`` over the
+    union exactly (percentiles are order-invariant)."""
+    import numpy as np
+    lat, ok, served, cold = [], 0, 0, 0
+    t0 = float("inf")
+    t1 = -float("inf")
+    n = 0
+    for r in results:
+        n += 1
+        t0 = min(t0, r.arrival_t)
+        if r.instance != "-":
+            served += 1
+        if r.cold_start:
+            cold += 1
+        if r.ok:
+            ok += 1
+            lat.append(r.latency)
+            t1 = max(t1, r.finish_t)
+    return {"n": n, "ok": ok, "served": served, "cold": cold,
+            "lat": np.asarray(lat, dtype=np.float64),
+            "t0": t0, "t1": t1}
+
+
+def merge_part_summaries(parts) -> dict:
+    """Combine :func:`part_summary` partials into the exact dict
+    :func:`summarize` computes over the concatenated results."""
+    import numpy as np
+    parts = [p for p in parts if p["n"]]
+    if not parts:
+        return {"n": 0}
+    n = sum(p["n"] for p in parts)
+    ok = sum(p["ok"] for p in parts)
+    served = sum(p["served"] for p in parts)
+    cold = sum(p["cold"] for p in parts)
+    lat = np.concatenate([p["lat"] for p in parts])
+    t0 = min(p["t0"] for p in parts)
+    t1 = max((p["t1"] for p in parts if p["ok"]), default=t0)
+    makespan = t1 - t0
+    goodput = ok / max(makespan, 1e-9) if ok else 0.0
+    return {
+        "n": n, "ok": ok, "fail_rate": 1 - ok / n,
+        "cold_rate": cold / served if served else 0.0,
+        "p50": float(np.percentile(lat, 50)) if len(lat) else float("nan"),
+        "p95": float(np.percentile(lat, 95)) if len(lat) else float("nan"),
+        "p99": float(np.percentile(lat, 99)) if len(lat) else float("nan"),
+        "mean": float(lat.mean()) if len(lat) else float("nan"),
+        "throughput": goodput,
+        "goodput": goodput,
+    }
 
 
 def summarize(results: List[RequestResult]) -> dict:

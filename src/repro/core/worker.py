@@ -367,7 +367,7 @@ class WorkerRuntime:
         # an unset (None) config falls back to the platform default
         cold = (cfg.cold_start_s if cfg.cold_start_s is not None
                 else sim.cold_default)
-        inst = Instance(iid=f"{w.name}/i{next(sim._iid)}", fn=cfg.name,
+        inst = Instance(iid=sim._alloc_iid(w), fn=cfg.name,
                         slots=cfg.concurrency,
                         ready_t=sim.now + cold * w.slowdown,
                         last_used=sim.now,

@@ -1,0 +1,29 @@
+"""Parallel discrete-event simulation: partitioned sim processes with
+conservative lookahead and a deterministic merge.
+
+Public surface::
+
+    from repro.parallel import run_partitioned, MergedRun
+
+    merged = run_partitioned(build, n_partitions=8, collect="summary")
+    merged.summary()            # == summarize() over the union
+    merged.digest()             # byte-identity projection
+
+See ``repro.parallel.runner`` for the synchronization model and
+``repro.parallel.partition`` for the lookahead derivation, ceiling
+apportionment, and the memory-bounded ``ResultSink``.
+"""
+from repro.parallel.partition import (ResultSink, combined_digest,
+                                      conservative_window, partition_streams,
+                                      split_ceiling)
+from repro.parallel.runner import MergedRun, run_partitioned
+
+__all__ = [
+    "MergedRun",
+    "ResultSink",
+    "combined_digest",
+    "conservative_window",
+    "partition_streams",
+    "run_partitioned",
+    "split_ceiling",
+]

@@ -8,7 +8,8 @@ from repro.workloads.arrivals import (ARRIVALS, ArrivalProcess,
                                       read_trace, register_arrival,
                                       write_trace)
 from repro.workloads.azure import (azure_trace_arrivals, azure_trace_iats,
-                                   load_azure_trace, trace_functions)
+                                   azure_trace_streams, load_azure_trace,
+                                   trace_functions)
 from repro.workloads.scenarios import (SCENARIOS, build_scenario,
                                        install_demo_configs, list_scenarios,
                                        register_scenario)
@@ -24,7 +25,7 @@ __all__ = [
     "DiurnalArrivals", "TraceArrivals", "get_arrival", "register_arrival",
     "read_trace", "write_trace", "iats_from_times",
     "load_azure_trace", "azure_trace_arrivals", "azure_trace_iats",
-    "trace_functions",
+    "azure_trace_streams", "trace_functions",
     "SCENARIOS", "build_scenario", "list_scenarios", "register_scenario",
     "install_demo_configs",
     "FunctionProfile", "MixedWorkload", "RequestBatch", "SizeDist",

@@ -173,6 +173,81 @@ def azure_trace_arrivals(path: str, *, function: Optional[str] = None,
         period_s=len(counts) * BIN_S * time_scale)
 
 
+#: trigger type → (priority class, p95 SLO seconds) heuristic for
+#: per-row profiles: user-facing triggers get interactive latency
+#: objectives, pipeline/background triggers run as batch with loose or
+#: no objectives. Unknown triggers fall back to interactive/1.0 s.
+TRIGGER_CLASSES: Dict[str, tuple] = {
+    "http": ("interactive", 0.5),
+    "event": ("interactive", 1.0),
+    "queue": ("batch", 5.0),
+    "storage": ("batch", 5.0),
+    "timer": ("batch", None),
+    "orchestration": ("batch", None),
+    "others": ("batch", None),
+}
+
+
+def azure_trace_streams(path: str, *, time_scale: float = 1.0,
+                        loop: bool = False,
+                        duration_s: Optional[float] = None,
+                        min_total: int = 1,
+                        max_functions: Optional[int] = None,
+                        rid_stride: Optional[int] = None,
+                        seed: int = 1):
+    """CSV → one per-row tenant stream each: a list of single-profile
+    ``MixedWorkload``s, so one trace file yields a multi-function mix.
+
+    Each trace row becomes its own workload — exact-IAT replay of that
+    function's minute counts (:func:`azure_trace_arrivals` semantics),
+    a :class:`~repro.workloads.workload.FunctionProfile` named by the
+    row's stable ``key()`` with ``weight=row.total`` and a
+    trigger-derived priority class / p95 SLO (:data:`TRIGGER_CLASSES`),
+    and a disjoint request-id range: stream ``i`` gets
+    ``rid_base = i * rid_stride`` (stride defaults to the next power of
+    ten above the busiest row's total, so ids also *read* as
+    stream-tagged). Disjoint per-stream rid ranges and per-stream seeds
+    are exactly the shape ``repro.parallel.partition_streams`` buckets
+    across partitions — every stream is self-contained, so any subset
+    replays identically.
+
+    Rows are ordered busiest-first (ties by function hash) for
+    determinism; ``min_total`` drops all-idle rows and
+    ``max_functions`` truncates to the heaviest N. ``duration_s``
+    overrides each stream's generation horizon (defaults to the traced
+    day — required when ``loop=True``, which otherwise never ends).
+    """
+    from repro.workloads.workload import FunctionProfile, MixedWorkload
+    rows = [r for r in load_azure_trace(path) if r.total >= min_total]
+    rows.sort(key=lambda r: (-r.total, r.func))
+    if max_functions is not None:
+        rows = rows[:max_functions]
+    if not rows:
+        raise ValueError(f"{path}: no rows with >= {min_total} invocations")
+    if rid_stride is None:
+        rid_stride = 10
+        while rid_stride <= max(r.total for r in rows):
+            rid_stride *= 10
+    streams = []
+    for i, row in enumerate(rows):
+        pri, slo = TRIGGER_CLASSES.get(row.trigger.strip().lower(),
+                                       ("interactive", 1.0))
+        n_bins = len(row.counts)
+        horizon = n_bins * BIN_S * time_scale
+        arrivals = TraceArrivals(
+            iats=minute_counts_to_iats(row.counts, time_scale=time_scale),
+            loop=loop, period_s=horizon)
+        profile = FunctionProfile(
+            fn=row.key(), weight=float(row.total),
+            slo_p95_s=None if slo is None else slo * time_scale,
+            priority=pri)
+        streams.append(MixedWorkload(
+            arrivals, [profile],
+            duration_s=horizon if duration_s is None else duration_s,
+            seed=seed + i, rid_base=i * rid_stride))
+    return streams
+
+
 def trace_functions(path: str) -> Dict[str, int]:
     """func-hash prefix → total invocations (exploration helper)."""
     return {r.key(): r.total for r in load_azure_trace(path)}

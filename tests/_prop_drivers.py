@@ -8,7 +8,6 @@ the same drivers in hypothesis ``@given(integers())`` so CI explores the
 seed space — one body, two harnesses, so the properties can never drift
 between the lanes.
 """
-import hashlib
 import itertools
 import random
 
@@ -20,20 +19,13 @@ FNS = ("a", "b", "c")
 
 def digest_sim(sim) -> str:
     """sha256[:16] over a run's full result + telemetry streams — THE
-    byte-identity projection every golden/equivalence suite compares
-    (one definition, so the suites can never drift apart on which
-    fields "byte-identical" covers)."""
-    h = hashlib.sha256()
-    for r in sim.results:
-        h.update(repr((r.rid, r.fn, r.ok, r.arrival_t, r.start_t, r.finish_t,
-                       r.cold_start, r.worker, r.instance, r.error)).encode())
-    for t in sim.telemetry:
-        h.update(repr((t.fn, t.t, t.queue_len, t.inflight, t.batch_size,
-                       t.cold, t.latency, t.ok)).encode())
-    for w in getattr(sim, "workflow_results", ()):
-        h.update(repr((w.wf, w.name, w.ok, w.arrival_t, w.finish_t,
-                       w.tasks, w.error)).encode())
-    return h.hexdigest()[:16]
+    byte-identity projection every golden/equivalence suite compares.
+    One definition: this delegates to
+    ``repro.core.simulator.stream_digest`` (which also accepts a
+    ``repro.parallel.MergedRun``), so the suites can never drift apart
+    on which fields "byte-identical" covers."""
+    from repro.core.simulator import stream_digest
+    return stream_digest(sim)
 
 
 def run_fnqueues_ops(seed: int, n_ops: int = 200) -> int:
@@ -493,3 +485,131 @@ def run_gateway_ops(seed: int, n_ops: int = 300) -> int:
     records = trial()
     assert trial() == records     # same seed => byte-identical verdicts
     return n_ops
+
+
+class _DetServiceModel:
+    """RNG-free service model for partition-equality trials: duration is
+    a pure function of the request, so a partition's requests cost the
+    same whether or not other partitions' requests interleave (the
+    shared-RNG ``SyntheticServiceModel`` cannot make that guarantee —
+    its sample stream depends on the global arrival interleaving)."""
+
+    def sample(self, cfg, *, batch_size, queue_len, prompt, cold, fn_cost):
+        base = 0.004 + 0.0008 * (prompt + cfg.gen_tokens) * fn_cost
+        base *= 1.0 + 0.30 * max(batch_size - 1, 0)
+        return base, True
+
+
+def run_partition_merge_ops(seed: int, n_partitions: int = 0) -> int:
+    """ISSUE-10 invariants for the parallel runner: on a random
+    multi-tenant scenario, (1) the K-partition merged stream
+    byte-equals the serial run on the union tree (results, telemetry,
+    decision logs, summary, counters); (2) same seed + same K ⇒
+    byte-identical merged output across repeated runs; (3) forcing
+    window barriers changes nothing and the barrier history satisfies
+    its invariants (strictly increasing barrier times, all partitions
+    drained at the final barrier). Returns the number of tenant
+    streams exercised.
+
+    Construction: tenant streams route through a ``tenant_hash`` root
+    (no RNG, crc32 — the exact assignment ``partition_streams`` uses)
+    into per-partition ``round_robin`` branches (no RNG), served by an
+    RNG-free service model — so the serial union run and the partition
+    runs consume identical randomness per request and byte-equality is
+    exact, not approximate."""
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import LBNode, build_leaf
+    from repro.core.simulator import Simulator, stream_digest, summarize
+    from repro.core.types import FunctionConfig
+    from repro.parallel import partition_streams, run_partitioned
+    from repro.workloads import (FunctionProfile, MixedWorkload,
+                                 PoissonArrivals, SizeDist)
+
+    rng = random.Random(seed)
+    K = n_partitions or rng.choice([2, 3, 4])
+    n_streams = rng.randrange(K, 3 * K + 1)
+    rates = [rng.choice([5.0, 10.0, 20.0]) for _ in range(n_streams)]
+    sizes = [rng.choice([8, 16, 24]) for _ in range(n_streams)]
+    wpl = rng.choice([2, 3])               # workers per partition leaf
+    dur = 2.0
+
+    def streams():
+        return [MixedWorkload(PoissonArrivals(rate=rates[j]),
+                              [FunctionProfile(fn=f"t{j}",
+                                               size=SizeDist.const(sizes[j]))],
+                              duration_s=dur, seed=500 + j,
+                              rid_base=j * 1_000_000)
+                for j in range(n_streams)]
+
+    def make_store(fns):
+        store = ConfigStore()
+        for fn in fns:
+            store.put(FunctionConfig(name=fn, arch="tiny_lm", concurrency=2,
+                                     cold_start_s=0.05, idle_timeout_s=5.0))
+        return store
+
+    def branch(k):
+        return build_leaf(f"p{k}", [f"p{k}w{i}" for i in range(wpl)],
+                          "round_robin")
+
+    # serial reference: all streams through the union tree
+    all_streams = streams()
+    serial = Simulator(
+        LBNode("root", "tenant_hash", children=[branch(k) for k in range(K)]),
+        make_store([s.profiles[0].fn for s in all_streams]),
+        _DetServiceModel(), seed=7, record_decisions=True,
+        iid_scope="worker")
+    for s in all_streams:
+        serial.load(s)
+    serial.run()
+
+    def build(k, n):
+        mine = partition_streams(streams(), n)[k]
+        sim = Simulator(LBNode("root", "tenant_hash", children=[branch(k)]),
+                        make_store([s.profiles[0].fn for s in mine]),
+                        _DetServiceModel(), seed=7, record_decisions=True,
+                        iid_scope="worker")
+        for s in mine:
+            sim.load(s)
+        return sim
+
+    # (1) merged K-partition run byte-equals the serial union run
+    merged = run_partitioned(build, K, mode="inline")
+    assert stream_digest(merged) == stream_digest(serial), seed
+    assert merged.routing_log() == serial.routing_log(), seed
+    assert merged.placement_log() == serial.placement_log(), seed
+    assert merged.gateway_log() == serial.gateway_log(), seed
+    assert merged.fault_log() == serial.fault_log(), seed
+    ms, ss = merged.summary(), summarize(serial.results)
+    assert set(ms) == set(ss), seed
+    for key in ms:
+        if isinstance(ss[key], float):
+            # counts/percentiles/makespans are exact; only ``mean`` sums
+            # floats in partition order instead of record order
+            assert abs(ms[key] - ss[key]) <= 1e-9 * max(1.0, abs(ss[key])), \
+                (seed, key, ms[key], ss[key])
+        else:
+            assert ms[key] == ss[key], (seed, key)
+    assert merged.counters["arrivals_seen"] == serial.arrivals_seen, seed
+    assert merged.counters["events_processed"] == serial.events_processed
+    assert merged.counters["arrivals_by_fn"] == serial.arrivals_by_fn, seed
+
+    # (2) run-twice determinism, full and summary collects
+    again = run_partitioned(build, K, mode="inline")
+    assert stream_digest(again) == stream_digest(merged), seed
+    assert again.routing_log() == merged.routing_log(), seed
+    summary = run_partitioned(build, K, mode="inline", collect="summary")
+    again_s = run_partitioned(build, K, mode="inline", collect="summary")
+    assert summary.digest() == again_s.digest(), seed
+    assert summary.summary() == merged.summary(), seed
+    assert summary.counters == merged.counters, seed
+
+    # (3) forced window barriers: same bytes + barrier invariants
+    win = run_partitioned(build, K, mode="inline",
+                          window_s=rng.choice([0.1, 0.25, 0.5]))
+    assert stream_digest(win) == stream_digest(serial), seed
+    assert win.barriers, seed
+    ts = [b["t"] for b in win.barriers]
+    assert ts == sorted(ts) and len(set(ts)) == len(ts), seed
+    assert all(p == 0 for p in win.barriers[-1]["pending"]), seed
+    return n_streams

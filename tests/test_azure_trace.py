@@ -13,9 +13,9 @@ import pytest
 
 from repro.workloads import build_scenario
 from repro.workloads.azure import (BIN_S, azure_trace_arrivals,
-                                   azure_trace_iats, load_azure_trace,
-                                   minute_counts_to_iats, select_function,
-                                   trace_functions)
+                                   azure_trace_iats, azure_trace_streams,
+                                   load_azure_trace, minute_counts_to_iats,
+                                   select_function, trace_functions)
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "data", "azure_sample.csv")
 
@@ -156,6 +156,76 @@ def test_loop_preserves_day_shape_and_rate(tmp_path):
     # every arrival sits in the first minute of its own 600 s cycle
     assert all((t % 600.0) < 60.0 for t in times)
     assert abs(arr.mean_rate() - 60 / 600.0) < 1e-9
+
+
+# ------------------------------------------- per-row streams (ISSUE 10)
+def test_azure_trace_streams_one_stream_per_row():
+    """One trace file ⇒ one self-contained tenant stream per function
+    row: busiest-first order, trigger-derived priority/SLO, disjoint
+    rid ranges, per-bin-exact replay counts."""
+    streams = azure_trace_streams(FIXTURE, time_scale=0.01)
+    assert [s.profiles[0].fn for s in streams] == \
+        ["9f8e7d6c", "f3e2a1b4", "a1b2c3d4"]       # by -total, then hash
+    assert [s.profiles[0].weight for s in streams] == [12.0, 11.0, 4.0]
+    # trigger classes: queue -> batch/5s, http -> interactive/0.5s,
+    # timer -> batch/no SLO (all SLOs in scaled time)
+    assert [p.priority for p in (s.profiles[0] for s in streams)] == \
+        ["batch", "interactive", "batch"]
+    assert streams[0].profiles[0].slo_p95_s == pytest.approx(5.0 * 0.01)
+    assert streams[1].profiles[0].slo_p95_s == pytest.approx(0.5 * 0.01)
+    assert streams[2].profiles[0].slo_p95_s is None
+    # rid stride: next power of ten above the busiest total (12) is 100
+    reqs = [s.generate() for s in streams]
+    assert [len(r) for r in reqs] == [12, 11, 4]
+    assert [r[0].rid for r in reqs] == [0, 100, 200]
+    rids = [r.rid for rs in reqs for r in rs]
+    assert len(set(rids)) == len(rids)             # globally disjoint
+    # deterministic: regeneration is byte-identical
+    again = azure_trace_streams(FIXTURE, time_scale=0.01)
+    assert [s.generate() for s in again] == reqs
+    # arrivals live inside the compressed 8-bin horizon
+    horizon = 8 * BIN_S * 0.01
+    assert all(0.0 < r.arrival_t <= horizon for rs in reqs for r in rs)
+
+
+def test_azure_trace_streams_filtering_and_stride():
+    assert [s.profiles[0].fn
+            for s in azure_trace_streams(FIXTURE, min_total=5)] == \
+        ["9f8e7d6c", "f3e2a1b4"]
+    only = azure_trace_streams(FIXTURE, max_functions=1)
+    assert [s.profiles[0].fn for s in only] == ["9f8e7d6c"]
+    custom = azure_trace_streams(FIXTURE, rid_stride=10**6)
+    assert [s.generate()[0].rid for s in custom] == [0, 10**6, 2 * 10**6]
+    with pytest.raises(ValueError):
+        azure_trace_streams(FIXTURE, min_total=100)
+
+
+def test_azure_trace_streams_run_and_partition():
+    """The per-row streams drive a multi-function simulator end to end,
+    and bucket by the same tenant hash the parallel runner partitions
+    on — every stream lands in exactly one bucket."""
+    from repro.core.config_store import ConfigStore
+    from repro.core.router import build_tree, tenant_index
+    from repro.core.simulator import Simulator, SyntheticServiceModel
+    from repro.core.types import FunctionConfig
+    from repro.parallel import partition_streams
+
+    streams = azure_trace_streams(FIXTURE, time_scale=0.01)
+    store = ConfigStore()
+    for s in streams:
+        store.put(FunctionConfig(name=s.profiles[0].fn, arch="tiny_lm",
+                                 concurrency=2, cold_start_s=0.05))
+    sim = Simulator(build_tree(2, fanout=2), store,
+                    SyntheticServiceModel(seed=2), seed=7)
+    assert sum(sim.load(s) for s in streams) == 27
+    res = sim.run()
+    assert len(res) == 27
+    assert sim.arrivals_by_fn == {"9f8e7d6c": 12, "f3e2a1b4": 11,
+                                  "a1b2c3d4": 4}
+    buckets = partition_streams(streams, 2)
+    assert sum(len(b) for b in buckets) == 3
+    for k, bucket in enumerate(buckets):
+        assert all(tenant_index(s.profiles[0].fn, 2) == k for s in bucket)
 
 
 def test_trace_replay_rejects_azure_kwargs_on_iat_format(tmp_path):

@@ -1,0 +1,345 @@
+"""Parallel simulation runner suite (ISSUE 10).
+
+Five contracts:
+
+1. **Serial equivalence** — ``run_partitioned`` with ``parallelism=1``
+   is byte-identical to a plain serial run (results, telemetry,
+   decision logs); the K-partition merged stream byte-equals the serial
+   union run on partition-friendly scenarios (the shared op-sequence
+   driver in ``tests/_prop_drivers.py``, run here over fixed seeds and
+   by tests/test_property.py under hypothesis).
+2. **Transport equivalence** — process mode and inline mode execute the
+   same driver protocol against identical simulators, so their merged
+   output is byte-identical.
+3. **Coupling** — a K=1 barrier-coupled run with a global ceiling
+   byte-equals the serial gateway run with that same ``max_inflight``;
+   ``split_ceiling`` apportions exactly (sum, floor-of-1, determinism);
+   ``Gateway.set_ceiling`` only gates *new* admissions.
+4. **Primitives** — ``ResultSink`` folds a result stream into the exact
+   ``part_summary`` partial + results-stream digest; ``merge_fleet_samples``
+   combines per-partition metrics order-independently;
+   ``conservative_window`` derives the documented lookahead.
+5. **Determinism** — same seed + same partition count ⇒ byte-identical
+   merged output across repeated runs (driver property 2).
+"""
+import multiprocessing
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.autoscale import Autoscaler
+from repro.autoscale.metrics import (FnSample, MetricsSample,
+                                     merge_fleet_samples)
+from repro.core.config_store import ConfigStore
+from repro.core.gateway import Gateway, GatewayConfig
+from repro.core.router import build_tree, tenant_index
+from repro.core.simulator import (Simulator, SyntheticServiceModel,
+                                  part_summary, stream_digest, summarize)
+from repro.core.types import FunctionConfig, Request
+from repro.parallel import (ResultSink, conservative_window,
+                            partition_streams, run_partitioned,
+                            split_ceiling)
+from repro.parallel.partition import maybe_attach_sink
+from repro.workloads import (FunctionProfile, MixedWorkload, PoissonArrivals,
+                             SizeDist)
+
+FORK = "fork" in multiprocessing.get_all_start_methods()
+
+
+# ------------------------------------------------------- split_ceiling
+
+
+def test_split_ceiling_proportional_and_exact():
+    assert split_ceiling(10, [1.0, 1.0]) == [5, 5]
+    assert split_ceiling(10, [3.0, 1.0]) == [8, 2]
+    # remainder ties break toward the lower partition index
+    assert split_ceiling(3, [1.0, 1.0]) == [2, 1]
+    for total, demands in [(7, [5.0, 2.0, 1.0]), (16, [0.1, 9.9, 3.0, 3.0]),
+                           (100, [1e-9, 1.0, 2.0])]:
+        alloc = split_ceiling(total, demands)
+        assert sum(alloc) == total
+        assert all(isinstance(a, int) for a in alloc)
+        assert alloc == split_ceiling(total, demands)   # deterministic
+
+
+def test_split_ceiling_floor_of_one():
+    """When the ceiling covers every partition, an idle partition keeps
+    one slot — otherwise it could never regenerate the occupancy that
+    wins quota back."""
+    assert split_ceiling(4, [100.0, 0.0, 0.0, 0.0]) == [1, 1, 1, 1]
+    alloc = split_ceiling(8, [50.0, 0.0, 1.0, 0.0])
+    assert sum(alloc) == 8 and min(alloc) >= 1
+    # total < K: the floor is unaffordable, lowest-remainder loses out
+    assert split_ceiling(2, [1.0, 1.0, 1.0]) == [1, 1, 0]
+    # degenerate demand: even split
+    assert split_ceiling(6, [0.0, 0.0, 0.0]) == [2, 2, 2]
+    assert split_ceiling(5, []) == []
+
+
+# ------------------------------------------------ lookahead derivation
+
+
+def _store(**cold_by_fn):
+    store = ConfigStore()
+    for fn, cold in cold_by_fn.items():
+        store.put(FunctionConfig(name=fn, arch="tiny_lm",
+                                 cold_start_s=cold))
+    return store
+
+
+def _sim(store, **kw):
+    return Simulator(build_tree(2, fanout=2), store,
+                     SyntheticServiceModel(seed=1), seed=1, **kw)
+
+
+def test_conservative_window_derivation():
+    # shortest cold start across registered functions
+    assert conservative_window(_sim(_store(a=0.05, b=0.2))) == 0.05
+    # unset cold_start_s falls back to the simulator default
+    sim = _sim(_store(a=None))
+    assert conservative_window(sim) == sim.cold_default
+    # an attached autoscaler caps the window at its tick period
+    sim = _sim(_store(a=0.5))
+    sim.attach_autoscaler(Autoscaler("reactive", interval_s=0.25))
+    assert conservative_window(sim) == 0.25
+    # floored at 1 ms so instant cold starts can't spin the barrier loop
+    assert conservative_window(_sim(_store(a=0.0))) == 1e-3
+
+
+# ---------------------------------------------------- stream bucketing
+
+
+def test_partition_streams_matches_tenant_hash():
+    streams = [MixedWorkload(PoissonArrivals(rate=5.0),
+                             [FunctionProfile(fn=f"t{j}")],
+                             duration_s=1.0, seed=j)
+               for j in range(11)]
+    buckets = partition_streams(streams, 3)
+    assert len(buckets) == 3
+    assert sum(len(b) for b in buckets) == len(streams)
+    for k, bucket in enumerate(buckets):
+        for s in bucket:
+            assert tenant_index(s.profiles[0].fn, 3) == k
+    # custom key override
+    by_seed = partition_streams(streams, 2, key=lambda s: f"s{s.seed}")
+    assert sum(len(b) for b in by_seed) == len(streams)
+
+
+# --------------------------------------------------------- ResultSink
+
+
+def _small_run(**kw):
+    store = ConfigStore()
+    store.put(FunctionConfig(name="fn", arch="tiny_lm", concurrency=2,
+                             cold_start_s=0.05, timeout_s=0.5))
+    sim = Simulator(build_tree(4, fanout=2), store,
+                    SyntheticServiceModel(seed=3), seed=9, **kw)
+    wl = MixedWorkload(PoissonArrivals(rate=150.0),
+                       [FunctionProfile(fn="fn", size=SizeDist.const(16))],
+                       duration_s=1.5, seed=42)
+    sim.load(wl)
+    return sim
+
+
+def test_result_sink_matches_list_reference():
+    """Folding rows through a sink reproduces the ``part_summary``
+    partial and the results-only stream digest of the retained list —
+    including failed rows (timeouts) in the hash and counts."""
+    sim = _small_run()
+    sim.run()
+    assert len(sim.results) > 0
+    sink = ResultSink()
+    for r in sim.results:
+        sink.append(r)
+    assert len(sink) == len(sim.results)
+    ref = part_summary(sim.results)
+    got = sink.part()
+    for key in ("n", "ok", "served", "cold", "t0", "t1"):
+        assert got[key] == ref[key], key
+    np.testing.assert_array_equal(got["lat"], ref["lat"])
+    # results-only digest == stream_digest with the side streams empty
+    shim = SimpleNamespace(results=sim.results, telemetry=[],
+                           workflow_results=[])
+    assert sink.digest() == stream_digest(shim)
+
+
+def test_result_sink_substitution_is_transparent():
+    """A sim run with the sink swapped in produces the same summary and
+    result digest as the same-seed run with the real list."""
+    ref = _small_run(collect_telemetry=False)
+    ref.run()
+    sim = _small_run(collect_telemetry=False)
+    sink = maybe_attach_sink(sim)
+    assert sink is not None and sim.results is sink
+    sim.run()
+    assert sink.digest() == stream_digest(ref)
+    from repro.core.simulator import merge_part_summaries
+    assert merge_part_summaries([sink.part()]) == summarize(ref.results)
+
+
+def test_maybe_attach_sink_refuses_illegal_states():
+    # an autoscaler slices sim.results[last:] per tick: needs the list
+    sim = _small_run()
+    sim.attach_autoscaler(Autoscaler("reactive", interval_s=0.5))
+    assert maybe_attach_sink(sim) is None
+    assert isinstance(sim.results, list)
+    # rows already recorded: folding would miss them
+    sim2 = _small_run()
+    sim2.run()
+    assert maybe_attach_sink(sim2) is None
+
+
+# --------------------------------------------- K=1 serial equivalence
+
+
+def _k1_build(k, n, **kw):
+    assert (k, n) == (0, 1)
+    return _small_run(record_decisions=True, **kw)
+
+
+def test_parallelism_1_byte_identical_to_serial():
+    serial = _small_run(record_decisions=True)
+    serial.run()
+    merged = run_partitioned(_k1_build, 1)
+    assert merged.mode == "inline"           # K=1 never forks
+    assert stream_digest(merged) == stream_digest(serial)
+    assert merged.digest() == stream_digest(serial)
+    assert merged.routing_log() == serial.routing_log()
+    assert merged.placement_log() == serial.placement_log()
+    assert merged.gateway_log() == serial.gateway_log()
+    assert merged.fault_log() == serial.fault_log()
+    assert merged.summary() == summarize(serial.results)
+    assert merged.counters["arrivals_seen"] == serial.arrivals_seen
+    assert merged.counters["events_processed"] == serial.events_processed
+    # forcing window barriers changes nothing but the barrier history
+    win = run_partitioned(_k1_build, 1, window_s=0.2)
+    assert stream_digest(win) == stream_digest(serial)
+    assert win.barriers and win.barriers[-1]["pending"] == [0]
+
+
+def test_coupled_k1_equals_serial_gateway_run():
+    """A K=1 coupled run IS a serial gateway run: the barrier loop
+    apportions the whole ceiling to the only partition, so the windowed
+    run must byte-equal the plain run with ``max_inflight`` set from
+    the start (resume-exactness of ``run(until)`` + ceiling no-op)."""
+    M = 3
+    serial = _small_run(record_decisions=True,
+                        gateway=GatewayConfig(max_inflight=M))
+    serial.run()
+    assert serial.gateway.shed_total > 0     # the ceiling binds
+    merged = run_partitioned(
+        lambda k, n: _k1_build(k, n, gateway=GatewayConfig(max_inflight=M)),
+        1, max_inflight=M)
+    assert stream_digest(merged) == stream_digest(serial)
+    assert merged.gateway_log() == serial.gateway_log()
+    assert merged.counters["gw_admitted"] == serial.gateway.admitted_total
+    assert merged.counters["gw_shed"] == serial.gateway.shed_total
+    assert all(b["ceilings"] == [M] for b in merged.barriers)
+
+
+# ------------------------------------------------ transport equality
+
+
+def _det_build(k, n):
+    """Partition builder for the K=2 transport test (module-level so the
+    closure forks cleanly): deterministic service, tenant_hash root."""
+    from _prop_drivers import _DetServiceModel
+    from repro.core.router import LBNode, build_leaf
+    streams = [MixedWorkload(PoissonArrivals(rate=20.0),
+                             [FunctionProfile(fn=f"t{j}",
+                                              size=SizeDist.const(16))],
+                             duration_s=1.0, seed=500 + j,
+                             rid_base=j * 1_000_000)
+               for j in range(4)]
+    mine = partition_streams(streams, n)[k]
+    store = ConfigStore()
+    for s in mine:
+        store.put(FunctionConfig(name=s.profiles[0].fn, arch="tiny_lm",
+                                 concurrency=2, cold_start_s=0.05))
+    sim = Simulator(
+        LBNode("root", "tenant_hash",
+               children=[build_leaf(f"p{k}", [f"p{k}w0", f"p{k}w1"],
+                                    "round_robin")]),
+        store, _DetServiceModel(), seed=7, record_decisions=True,
+        iid_scope="worker", collect_telemetry=False)
+    for s in mine:
+        sim.load(s)
+    return sim
+
+
+@pytest.mark.skipif(not FORK, reason="fork start method unavailable")
+def test_process_mode_matches_inline():
+    inline = run_partitioned(_det_build, 2, mode="inline")
+    proc = run_partitioned(_det_build, 2, mode="process")
+    assert proc.mode == "process"
+    assert stream_digest(proc) == stream_digest(inline)
+    assert proc.digests == inline.digests
+    assert proc.routing_log() == inline.routing_log()
+    assert proc.counters == inline.counters
+    assert proc.summary() == inline.summary()
+    # summary collect ships partials instead of rows, same projection
+    sproc = run_partitioned(_det_build, 2, mode="process",
+                            collect="summary")
+    assert sproc.digests == inline.digests
+    assert sproc.results == []
+    assert sproc.summary() == inline.summary()
+
+
+# ------------------------------------------------- Gateway.set_ceiling
+
+
+def test_set_ceiling_only_gates_new_admits():
+    gw = Gateway(GatewayConfig(max_inflight=4))
+    reqs = [Request(fn="f", arrival_t=0.0, rid=i) for i in range(4)]
+    for r in reqs[:3]:
+        assert gw.admit(r, 0.0) is None
+    gw.set_ceiling(1)
+    assert gw.inflight == 3                  # existing admits keep slots
+    assert gw.admit(reqs[3], 0.1) is not None    # new admit sees ceiling 1
+    for r in reqs[:3]:
+        gw.release(r, 0.2)
+    assert gw.admit(reqs[3], 0.3) is None    # below the new ceiling again
+    gw.set_ceiling(None)                     # uncapped
+    for i in range(10, 20):
+        assert gw.admit(Request(fn="f", arrival_t=0.4, rid=i), 0.4) is None
+
+
+# ---------------------------------------------- windowed metrics merge
+
+
+def test_merge_fleet_samples():
+    a = MetricsSample(t=1.0, replicas=2, workers=4, queue=3, inflight=5,
+                      arrivals=10, completions=8, cold_starts=1,
+                      fns=(FnSample(fn="a", queue=3, inflight=5, arrivals=10,
+                                    completions=8, warm=2, p95_est=0.3,
+                                    shed=1, goodput=7),), unhealthy=1)
+    b = MetricsSample(t=2.0, replicas=1, workers=2, queue=1, inflight=2,
+                      arrivals=4, completions=3, cold_starts=0,
+                      fns=(FnSample(fn="b", queue=1, inflight=2, arrivals=4,
+                                    completions=3, warm=1, p95_est=0.1),
+                           FnSample(fn="a", queue=0, inflight=0, arrivals=1,
+                                    completions=1, warm=1, p95_est=0.5)))
+    m = merge_fleet_samples([a, None, b])
+    assert (m.t, m.replicas, m.workers) == (2.0, 3, 6)
+    assert (m.queue, m.inflight, m.arrivals) == (4, 7, 14)
+    assert (m.completions, m.cold_starts, m.unhealthy) == (11, 1, 1)
+    assert [f.fn for f in m.fns] == ["a", "b"]       # re-sorted by name
+    fa = m.fn("a")
+    assert (fa.arrivals, fa.completions, fa.warm) == (11, 9, 3)
+    assert fa.p95_est == 0.5                         # max, not sum
+    assert (fa.shed, fa.goodput) == (1, 7)
+    # order-independent and None-tolerant
+    assert merge_fleet_samples([b, a]) == m
+    assert merge_fleet_samples([]).workers == 0
+    assert merge_fleet_samples([None]).t == 0.0
+
+
+# ------------------------------------ op-sequence property driver (ISSUE 10)
+# Fixed-seed runs keep the partition-merge invariants in the tier-1 lane
+# even without hypothesis; tests/test_property.py wraps the same driver
+# in @given(integers()) to explore the seed space in CI.
+@pytest.mark.parametrize("seed", range(3))
+def test_partition_merge_byte_equivalence(seed):
+    from _prop_drivers import run_partition_merge_ops
+    assert run_partition_merge_ops(seed) > 0

@@ -27,7 +27,7 @@ from repro.autoscale import Autoscaler, build_pool, get_autoscaler
 from repro.core.config_store import ConfigStore
 from repro.core.placement import (PLACERS, Placer, get_placer, list_placers,
                                   register_placer)
-from repro.core.router import build_tree
+from repro.core.router import build_leaf, build_tree
 from repro.core.simulator import (Simulator, SyntheticServiceModel,
                                   summarize)
 from repro.core.types import FunctionConfig, Request
@@ -359,6 +359,109 @@ def test_deadline_aware_avoids_memory_blocked_cold_start():
     pick = deadline_aware_policy(req, ["blocked", "roomy"], view,
                                  _random.Random(0), 0.0)
     assert pick == "roomy"
+
+
+def test_graded_mem_eta_prefers_nearly_free_blocked_worker():
+    """ISSUE-10 satellite A/B at the policy level: the flat penalty
+    prices a 24 MB deficit identically to a full worker, so it routes
+    to a drowning-but-startable worker; the placer-aware graded ETA
+    prices the *unblock wait* and picks the nearly-free idle worker."""
+    import random as _random
+    from repro.core.placement import get_placer
+    from repro.core.router import StateView, WorkerState, deadline_aware_policy
+
+    def make_view():
+        view = StateView()
+        view.fn_memory["fn"] = 1024.0
+        # blocked: idle, 24 MB short of hosting the replica
+        view.update(WorkerState(worker="blocked", mem_free_mb=1000.0,
+                                queue_len=0, inflight=0, capacity=8), 0.0)
+        # drowning: room to start, but 12 queued + 8 inflight ahead
+        view.update(WorkerState(worker="drowning", mem_free_mb=2048.0,
+                                queue_len=12, inflight=8, capacity=8,
+                                fn_queue={"fn": 12}), 0.0)
+        return view
+
+    req = Request(fn="fn", arrival_t=0.0, deadline_t=1.0)
+    flat = deadline_aware_policy(req, ["blocked", "drowning"], make_view(),
+                                 _random.Random(0), 0.0)
+    assert flat == "drowning"
+    graded = make_view()
+    graded.mem_eta = get_placer("first_fit").blocked_cold_eta_s
+    pick = deadline_aware_policy(req, ["blocked", "drowning"], graded,
+                                 _random.Random(0), 0.0)
+    assert pick == "blocked"
+    # the graded estimate is capped at the flat penalty: a *hopeless*
+    # deficit with a mountain of outstanding work never outranks the
+    # flat model's view of an unblocked worker
+    from repro.core.router import MEM_BLOCKED_PENALTY_S
+    eta = get_placer("first_fit").blocked_cold_eta_s(
+        4096.0, 0.0, 1e9, 10**6, 10**6)
+    assert eta == MEM_BLOCKED_PENALTY_S
+
+
+def _mem_eta_ab_sim(mem_eta):
+    """Memory-tight fleet for the routing A/B: one worker pinned by a
+    soon-to-idle filler replica (blocked for ``big``), the other
+    startable but absorbing the whole arrival stream under the flat
+    penalty."""
+    store = ConfigStore()
+    # filler holds half of one worker's memory for ~0.7 s of service,
+    # then its replica idles out 0.1 s later — the "unblock" moment,
+    # safely after the last big arrival so the flat run stays pinned
+    store.put(FunctionConfig(name="filler", arch="tiny_lm", concurrency=1,
+                             memory_mb=512, cold_start_s=0.0,
+                             idle_timeout_s=0.1, gen_tokens=1500))
+    store.put(FunctionConfig(name="big", arch="tiny_lm", concurrency=1,
+                             memory_mb=1024, cold_start_s=0.02,
+                             idle_timeout_s=5.0, timeout_s=30.0,
+                             gen_tokens=55))
+    sim = Simulator(build_leaf("b", ["w0", "w1"], "deadline_aware"), store,
+                    SyntheticServiceModel(seed=2), seed=7,
+                    worker_memory_mb=1024, mem_eta=mem_eta)
+    sim.submit(Request(fn="filler", arrival_t=0.0, rid=0))
+    # 50 arrivals at 100/s, all inside the blocked window: service is
+    # ~50 ms each, so the startable worker drowns at 5x its drain rate
+    for i in range(50):
+        sim.submit(Request(fn="big", arrival_t=0.05 + 0.01 * i, rid=1 + i))
+    sim.run()
+    return sim
+
+
+def test_graded_mem_eta_spreads_blocked_load_and_wins_ab():
+    """End-to-end A/B: under the flat penalty every ``big`` request
+    piles onto the single startable worker; the graded ETA also queues
+    on the blocked worker (which unblocks as soon as the filler replica
+    idles out), serving from both and cutting the mean latency."""
+    flat = _mem_eta_ab_sim("flat")
+    graded = _mem_eta_ab_sim("placer")
+    workers = lambda sim: {r.worker for r in sim.results  # noqa: E731
+                           if r.fn == "big" and r.ok}
+    assert len(workers(flat)) == 1         # flat: one-worker pileup
+    assert len(workers(graded)) == 2       # graded: both serve
+    mean = lambda sim: (sum(r.latency for r in sim.results  # noqa: E731
+                            if r.fn == "big" and r.ok)
+                        / sum(r.fn == "big" and r.ok for r in sim.results))
+    assert mean(graded) < mean(flat)
+
+
+def test_mem_eta_placer_is_noop_without_memory_pressure():
+    """With uncapped workers the blocked branch never fires, so the
+    graded pricing must not move a byte versus the flat default."""
+    wl = build_scenario("multi_tenant", rps=200.0, duration_s=4.0, seed=3)
+
+    def run(mode):
+        store = ConfigStore()
+        install_demo_configs(store, wl)
+        sim = Simulator(
+            build_tree(8, fanout=4, leaf_policy="deadline_aware",
+                       inner_policy="deadline_aware"),
+            store, SyntheticServiceModel(seed=2), seed=7,
+            worker_memory_mb=None, mem_eta=mode)
+        sim.load(wl)
+        sim.run()
+        return sim
+    assert _digest(run("placer")) == _digest(run("flat"))
 
 
 def test_branch_level_state_rows_published_for_deadline_trees():
